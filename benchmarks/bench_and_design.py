@@ -1,0 +1,55 @@
+"""Paper Fig. 4: AND between RLE mask and Plain mask — RLE->Plain vs
+Plain->RLE conversion strategies across Plain-mask compression ratios.
+
+Validates the paper's design choice (§5.1 Alternative Design): converting
+the RLE side is consistently better because Plain->RLE conversion overhead
+dominates even when the converted mask would be highly compressible.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import encodings as E
+from repro.core import logical as L
+from repro.core import primitives as P
+from benchmarks.common import rle_friendly, time_fn, write_csv
+
+
+def run(n=2_000_000, ratios=(1, 10, 100, 1000)):
+    rng = np.random.default_rng(1)
+    # fixed highly-compressed RLE mask
+    vals = rle_friendly(rng, n, 2, 20_000)
+    rs, re_, rn = P.plain_mask_to_rle(jnp.asarray(vals == 0), cap_out=n // 1000)
+    rle = E.RLEMask(starts=rs, ends=re_, n=rn, nrows=n)
+
+    rows = []
+    for ratio in ratios:
+        plain_dense = rle_friendly(rng, n, 2, ratio) == 0
+        plain = E.make_plain_mask(plain_dense)
+
+        # paper design: convert RLE -> Plain, then bitwise AND
+        def rle_to_plain_and():
+            cov = P.rle_to_plain(None, rle.starts, rle.ends, rle.n, n)
+            return cov & plain.values
+
+        # alternative design: convert Plain -> RLE, then range_intersect
+        cap = int(np.diff(np.flatnonzero(np.diff(plain_dense.astype(np.int8)) != 0)).size + 4) + n // 100
+
+        def plain_to_rle_and():
+            s, e, cnt = P.plain_mask_to_rle(plain.values, cap_out=cap)
+            m2 = E.RLEMask(starts=s, ends=e, n=cnt, nrows=n)
+            return P.range_intersect_masks(rle, m2)
+
+        t1 = time_fn(jax.jit(rle_to_plain_and)) * 1e3
+        t2 = time_fn(jax.jit(plain_to_rle_and)) * 1e3
+        rows.append({"plain_ratio": ratio, "rle_to_plain_ms": t1,
+                     "plain_to_rle_ms": t2, "speedup": t2 / t1})
+    print("[bench_and_design] paper Fig. 4")
+    write_csv("and_design.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

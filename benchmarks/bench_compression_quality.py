@@ -1,0 +1,53 @@
+"""Paper Fig. 9: query runtime degradation as RLE compression quality drops.
+
+Reproduces the ablation: start from naturally grouped partkeys (~30
+rows/key) and systematically break runs into 2..16 pieces, running the
+Q17-analogue each time. The paper sees 6-6.6x slowdown from 30x to 1.87x
+compression; the same monotone degradation must appear here.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import compress
+from repro.core.table import Table
+from benchmarks.common import time_fn, write_csv
+from benchmarks.bench_tpch import q17
+
+
+def run(n=2_000_000, breaks=(1, 2, 4, 8, 16)):
+    rng = np.random.default_rng(3)
+    n_parts = n // 30
+    part_keys = np.unique(rng.integers(0, n_parts, n // 600)).astype(np.int32)
+    base = np.sort(rng.integers(0, n_parts, n)).astype(np.int32)
+    quantity = rng.integers(1, 51, n).astype(np.int32)
+    price = (rng.random(n) * 1000).astype(np.float32)
+
+    rows = []
+    for k in breaks:
+        # break each run into k interleaved pieces (destroys adjacency)
+        if k == 1:
+            pk = base
+        else:
+            idx = np.arange(n)
+            pk = base[(idx % k) * (n // k) + np.minimum(idx // k, n // k - 1)]
+            pk = np.sort(rng.permutation(pk).reshape(k, -1), axis=1).reshape(-1)
+        t = Table.from_arrays(
+            {"partkey": pk, "quantity": quantity, "price": price},
+            cfg=compress.CompressionConfig(plain_threshold=1000),
+            encodings={"partkey": "rle"})
+        stats = compress.analyze(pk)
+        q = q17(t, part_keys)
+        ms = time_fn(lambda: q.run(), warmup=1, iters=3) * 1e3
+        rows.append({"break_factor": k, "n_runs": stats.n_runs,
+                     "compression": stats.rle_ratio, "q17_ms": ms})
+    base_ms = rows[0]["q17_ms"]
+    for r in rows:
+        r["slowdown"] = r["q17_ms"] / base_ms
+    print("[bench_compression_quality] paper Fig. 9")
+    write_csv("compression_quality.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,88 @@
+"""Paper Fig. 11 + §9.2: production star-schema queries on compressed data.
+
+Synthesizes the production shape at reduced scale: a fact table with
+RLE-friendly dimension-key columns (V-order-style locality), small dimension
+tables, bridge-table semi-joins. Q1: 7 semi-joins + 2 PK-FK joins + SUM
+group-by; Q2/Q3: 10 semi-joins + 1 PK-FK join (paper §9.2 shapes). Reports
+compressed vs plain execution and the §C.2-style footprint table.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import compress
+from repro.core.plan import Query, col, pk_fk_gather
+from repro.core.table import Table
+from benchmarks.common import rle_friendly, time_fn, write_csv
+
+
+def make_star(rng, n):
+    cols = {}
+    cards = [4, 16, 64, 256, 1000, 4000, 16000, 1, 50, 200, 2000, 30, 12, 8, 400]
+    for i, card in enumerate(cards):
+        if card == 1:
+            cols[f"c{i}"] = np.zeros(n, np.int32)  # paper's single-run column 7
+        elif card <= 256:
+            cols[f"c{i}"] = rle_friendly(rng, n, card, mean_run=max(2000 // card, 30))
+        else:
+            cols[f"c{i}"] = np.sort(rng.integers(0, card, n)).astype(np.int32)
+    cols["measure"] = (rng.random(n) * 100).astype(np.float32)
+    return cols
+
+
+def _semi_keys(rng, card, frac):
+    k = max(1, int(card * frac))
+    return np.unique(rng.integers(0, card, k)).astype(np.int32)
+
+
+def run(n=3_000_000):
+    rng = np.random.default_rng(4)
+    data = make_star(rng, n)
+    t_comp = Table.from_arrays(
+        data, cfg=compress.CompressionConfig(plain_threshold=1000))
+    t_plain = Table.from_arrays(
+        data, cfg=compress.CompressionConfig(),
+        encodings={k: "plain" for k in data})
+
+    dims = {"c2": 64, "c3": 256, "c4": 1000, "c5": 4000, "c8": 50,
+            "c9": 200, "c10": 2000, "c11": 30, "c12": 12, "c13": 8}
+    pk_payload = (np.arange(16000, dtype=np.int32) % 97).astype(np.int32)
+
+    def q1(t):
+        q = Query(t)
+        for cname in ("c2", "c3", "c4", "c5", "c8", "c9", "c11"):  # 7 semi-joins
+            q = q.semi_join(cname, _semi_keys(rng, dims[cname], 0.5))
+        return q.groupby(["c12"], {"s": ("sum", "measure"),
+                                   "c": ("count", None)}, num_groups_cap=32)
+
+    def q2(t, thresh):
+        q = Query(t)
+        for cname in dims:  # 10 semi-joins
+            q = q.semi_join(cname, _semi_keys(rng, dims[cname], 0.6))
+        q = q.filter(col("c13") < thresh)
+        return q.groupby(["c12"], {"s": ("sum", "measure")}, num_groups_cap=32)
+
+    rows = []
+    for qname, qf in [("Q1", lambda t: q1(t)), ("Q2", lambda t: q2(t, 6)),
+                      ("Q3", lambda t: q2(t, 3))]:
+        rec = {"query": qname}
+        for label, t in [("plain", t_plain), ("compressed", t_comp)]:
+            rng_state = rng.bit_generator.state
+            q = qf(t)
+            rng.bit_generator.state = rng_state  # same key sets for both
+            rec[f"{label}_ms"] = time_fn(lambda: q.run(), warmup=1, iters=3) * 1e3
+        rec["speedup"] = rec["plain_ms"] / rec["compressed_ms"]
+        rows.append(rec)
+
+    # §C.2-style footprint (Fig. 10 analogue)
+    foot = [{"column": k, "encoding": t_comp.encoding_of(k),
+             "compressed_KiB": compress.encoded_nbytes(t_comp.columns[k]) / 1024,
+             "plain_KiB": n * 4 / 1024} for k in list(data)[:8]]
+    print("[bench_production] paper Figs. 10+11 (reduced scale)")
+    write_csv("production.csv", rows)
+    write_csv("production_footprint.csv", foot, print_table=False)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Paper Fig. 16 (App. B.2): TPC-H with zipf skew, generic (non-query-
+specific) ordering. The paper's finding: skew alone is NOT sufficient —
+only the low-cardinality group-by query (Q1) speeds up; high-cardinality
+columns stay RLE-hostile and decompression overhead erases gains elsewhere.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import compress
+from repro.core.plan import Query, col
+from repro.core.table import Table
+from benchmarks.common import time_fn, write_csv
+from repro.core import arithmetic
+
+
+def run(n=2_000_000, z=1.3):
+    rng = np.random.default_rng(6)
+    # zipf-skewed columns, generic global sort on (returnflag, partkey)
+    returnflag = np.minimum(rng.zipf(z, n) - 1, 2).astype(np.int32)
+    partkey = np.minimum(rng.zipf(z, n) - 1, n // 30).astype(np.int32)
+    order = np.lexsort((partkey, returnflag))
+    data = {
+        "returnflag": returnflag[order],
+        "partkey": partkey[order],
+        "quantity": rng.integers(1, 51, n).astype(np.int32),
+        "shipdate": rng.integers(0, 2557, n).astype(np.int32),
+        "price": (rng.random(n) * 1000).astype(np.float32),
+    }
+    t_comp = Table.from_arrays(
+        data, cfg=compress.CompressionConfig(plain_threshold=1000))
+    t_plain = Table.from_arrays(
+        data, cfg=compress.CompressionConfig(),
+        encodings={k: "plain" for k in data})
+
+    def q1_like(t):
+        return (Query(t).filter(col("shipdate") <= 2400)
+                .groupby(["returnflag"], {"s": ("sum", "quantity"),
+                                          "c": ("count", None)},
+                         num_groups_cap=8))
+
+    def q6_like(t):
+        return (Query(t)
+                .filter(col("shipdate").between(500, 900)
+                        & (col("quantity") < 24))
+                .aggregate({"s": ("sum", "price")}))
+
+    rows = []
+    for qn, qf in [("Q1_lowcard_groupby", q1_like), ("Q6_filters", q6_like)]:
+        ms_p = time_fn(lambda: qf(t_plain).run(), warmup=1, iters=3) * 1e3
+        ms_c = time_fn(lambda: qf(t_comp).run(), warmup=1, iters=3) * 1e3
+        rows.append({"query": qn, "plain_ms": ms_p, "compressed_ms": ms_c,
+                     "speedup": ms_p / ms_c})
+    print("[bench_skew] paper Fig. 16 — skew alone is not sufficient")
+    print("  encodings:", {k: t_comp.encoding_of(k) for k in data})
+    write_csv("skew.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,111 @@
+"""Paper Figs. 6+7: TPC-H-style queries, Plain vs Compressed input data.
+
+Generates LINEITEM/PART-like tables with query-specific sort orders (paper
+§9.1.1, Table 7), then runs Q1/Q6/Q17/Q19-analogue pipelines twice: once
+with all columns forced Plain, once with the §9 heuristic encodings. Reports
+run time and in-memory footprint (Fig. 6's run-count collapse shows up as
+the encoded column sizes).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.core import arithmetic, compress
+from repro.core.plan import Query, col, pk_fk_gather
+from repro.core.table import Table
+from benchmarks.common import time_fn, write_csv
+
+
+# paper Table 7: query-specific multi-column sort orders
+SORT_ORDERS = {
+    "Q1": ("returnflag", "linestatus", "shipdate", "quantity"),
+    "Q6": ("quantity", "discount", "shipdate"),
+    "Q17": ("partkey",),
+    "Q19": ("partkey",),
+}
+
+
+def make_lineitem(rng, n, order=None):
+    """LINEITEM-like columns, globally sorted by ``order`` (paper §9.1.1)."""
+    cols = {
+        "returnflag": rng.integers(0, 3, n).astype(np.int32),
+        "linestatus": rng.integers(0, 2, n).astype(np.int32),
+        "shipdate": rng.integers(0, 2557, n).astype(np.int32),
+        "quantity": rng.integers(1, 51, n).astype(np.int32),
+        "discount": rng.integers(0, 11, n).astype(np.int32),
+        "price": (rng.random(n).astype(np.float32) * 1000),
+        "tax": rng.integers(0, 9, n).astype(np.int32),
+        "partkey": rng.integers(0, n // 30, n).astype(np.int32),
+    }
+    if order:
+        perm = np.lexsort(tuple(cols[c] for c in reversed(order)))
+        cols = {k: v[perm] for k, v in cols.items()}
+    return cols
+
+
+def q1(t: Table):
+    return (Query(t)
+            .filter(col("shipdate") <= 2400)
+            .groupby(["returnflag", "linestatus"],
+                     {"sum_qty": ("sum", "quantity"),
+                      "sum_price": ("sum", "price"),
+                      "avg_disc": ("avg", "discount"),
+                      "cnt": ("count", None)}, num_groups_cap=16))
+
+
+def q6(t: Table):
+    return (Query(t)
+            .filter(col("shipdate").between(500, 864)
+                    & col("discount").between(5, 7) & (col("quantity") < 24))
+            .map("rev", lambda env: arithmetic.binary_op(
+                env["price"], env["discount"], "mul"))
+            .aggregate({"revenue": ("sum", "rev")}))
+
+
+def q17(t: Table, part_keys):
+    return (Query(t)
+            .semi_join("partkey", part_keys)
+            .filter(col("quantity") < 10)
+            .aggregate({"sum_price": ("sum", "price"), "c": ("count", None)}))
+
+
+def q19(t: Table, part_keys):
+    return (Query(t)
+            .semi_join("partkey", part_keys)
+            .filter(col("quantity").between(5, 30)
+                    & (col("shipdate") > 100))
+            .map("rev", lambda env: arithmetic.binary_op(
+                env["price"], env["discount"], "mul"))
+            .aggregate({"revenue": ("sum", "rev")}))
+
+
+def run(n=2_000_000):
+    rng = np.random.default_rng(2)
+    part_keys = np.unique(rng.integers(0, n // 30, n // 600)).astype(np.int32)
+
+    rows = []
+    for qname, qfn in [("Q1", q1), ("Q6", q6), ("Q17", q17), ("Q19", q19)]:
+        data = make_lineitem(rng, n, order=SORT_ORDERS[qname])
+        t_comp = Table.from_arrays(
+            data, cfg=compress.CompressionConfig(plain_threshold=1_000))
+        t_plain = Table.from_arrays(
+            data, cfg=compress.CompressionConfig(),
+            encodings={k: "plain" for k in data})
+        rec = {"query": qname, "rows": n,
+               "rle_cols": sum("RLE" in t_comp.encoding_of(k) for k in data)}
+        for label, t in [("plain", t_plain), ("compressed", t_comp)]:
+            q = qfn(t, part_keys) if qname in ("Q17", "Q19") else qfn(t)
+            rec[f"{label}_ms"] = time_fn(lambda: q.run(), warmup=1,
+                                         iters=3) * 1e3
+            rec[f"{label}_MiB"] = t.nbytes() / 2**20
+        rec["speedup"] = rec["plain_ms"] / rec["compressed_ms"]
+        rec["mem_ratio"] = rec["plain_MiB"] / rec["compressed_MiB"]
+        rows.append(rec)
+    print("[bench_tpch] paper Figs. 6+7 (reduced scale, Table-7 orderings)")
+    write_csv("tpch.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Shared benchmark utilities: timing, CSV output, data generators.
+
+All benches run on the CPU backend at reduced row counts (DESIGN.md §9
+deviation 5): absolute times are not comparable to the paper's A100 numbers,
+but the *relative* Plain-vs-Compressed comparisons — which are the paper's
+claims — are preserved, and every harness mirrors one paper table/figure.
+"""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+import jax
+
+ART_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "artifacts", "bench")
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time of a jitted callable (seconds)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def write_csv(name: str, rows: List[Dict], print_table: bool = True):
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, name)
+    if rows:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0]))
+            w.writeheader()
+            w.writerows(rows)
+    if print_table and rows:
+        cols = list(rows[0])
+        print("  " + " | ".join(f"{c:>14s}" for c in cols))
+        for r in rows:
+            print("  " + " | ".join(
+                f"{(f'{v:.4g}' if isinstance(v, float) else str(v)):>14s}"
+                for v in r.values()))
+    print(f"  -> {path}")
+    return path
+
+
+def rle_friendly(rng, n: int, n_vals: int, mean_run: int) -> np.ndarray:
+    """Values with geometric run lengths averaging ``mean_run``."""
+    n_runs = max(n // mean_run, 1)
+    lens = rng.geometric(1.0 / mean_run, n_runs)
+    vals = rng.integers(0, n_vals, n_runs)
+    out = np.repeat(vals, lens)[:n]
+    if len(out) < n:
+        out = np.concatenate([out, np.full(n - len(out), vals[-1])])
+    return out.astype(np.int32)

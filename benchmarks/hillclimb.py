@@ -1,0 +1,76 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Perf hillclimb driver: compile one (arch x shape) cell with config
+overrides and report the three roofline terms.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch chatglm3_6b \\
+        --shape train_4k --set act_seq_axis=None --set q_chunk=0
+
+Used by the EXPERIMENTS.md §Perf iterations: every run is one
+hypothesis->change->measure cycle.
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+
+PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+
+
+def measure(arch, shape, overrides, accum=None, multi=False):
+    from repro.launch import dryrun, hlo_cost
+    from repro.launch.mesh import make_production_mesh
+    if accum is not None:
+        dryrun.GRAD_ACCUM[arch] = accum
+    mesh = make_production_mesh(multi_pod=multi)
+
+    orig_exec = dryrun.exec_config
+
+    def patched_exec(cfg, shape_, mesh_, **kw):
+        out = orig_exec(cfg, shape_, mesh_, **kw)
+        return dataclasses.replace(out, **overrides) if overrides else out
+
+    dryrun.exec_config = patched_exec
+    try:
+        jitted, args, cfg = dryrun.build_cell(arch, shape, mesh)
+        with jax.sharding.set_mesh(mesh):
+            compiled = jitted.lower(*args).compile()
+    finally:
+        dryrun.exec_config = orig_exec
+    mem = compiled.memory_analysis()
+    parsed = hlo_cost.analyze(compiled.as_text())
+    peak = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    terms = {
+        "compute_s": parsed["flops"] / PEAK_FLOPS,
+        "memory_s": parsed["bytes"] / HBM_BW,
+        "collective_s": parsed["collective_bytes_total"] / ICI_BW,
+        "peak_GiB": peak / 2**30,
+        "coll_by_type_GiB": {k: v / 2**30 for k, v in
+                             parsed["collective_bytes_by_type"].items()
+                             if v > 0},
+    }
+    terms["bound_s"] = max(terms["compute_s"], terms["memory_s"],
+                           terms["collective_s"])
+    return terms
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (value eval'd)")
+    ap.add_argument("--accum", type=int, default=None)
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = eval(v)  # noqa: S307 - operator tool
+    t = measure(args.arch, args.shape, overrides, args.accum)
+    print(json.dumps(t, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

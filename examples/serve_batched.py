@@ -1,0 +1,22 @@
+"""Batched serving: prefill + greedy decode with KV/SSM-state caches.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch qwen2_1p5b
+    PYTHONPATH=src python examples/serve_batched.py --arch zamba2_1p2b
+
+Serves a batch of requests through the same serve path the dry-run lowers
+for the production mesh (decode_32k / long_500k cells). SSM/hybrid archs
+demonstrate O(1)-state decode (the long_500k enabler).
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv = ["--arch", "qwen2_1p5b"] + argv
+    if "--smoke" not in argv:
+        argv.append("--smoke")
+    serve_main(argv)
+    print("serve_batched example OK")

@@ -1,0 +1,97 @@
+"""Architecture registry + assigned input-shape sets (see DESIGN.md §5).
+
+Every assigned architecture is a module exposing ``CONFIG`` (the exact
+published configuration) and ``smoke_config()`` (a reduced same-family config
+for CPU smoke tests). ``input_specs`` builds ShapeDtypeStruct stand-ins for
+the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelConfig, init_cache
+
+ARCHS = (
+    "zamba2_1p2b",
+    "smollm_360m",
+    "chatglm3_6b",
+    "yi_9b",
+    "qwen2_1p5b",
+    "granite_moe_3b_a800m",
+    "qwen3_moe_235b_a22b",
+    "xlstm_350m",
+    "musicgen_large",
+    "llava_next_34b",
+)
+
+# canonical shape set for the LM pool (seq_len, global_batch, kind)
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{name.replace('-', '_')}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{name.replace('-', '_')}")
+    return mod.smoke_config()
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic attention (DESIGN.md §5 skips)."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k skipped: pure full-attention arch (O(S^2))"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: str, batch_override: Optional[int] = None):
+    """ShapeDtypeStruct stand-ins for every model input of (arch × shape).
+
+    For decode shapes, returns (batch_specs, cache_specs, pos_spec).
+    """
+    seq, gb, kind = SHAPES[shape]
+    gb = batch_override or gb
+    i32 = jnp.int32
+
+    def tok(b, l):
+        return jax.ShapeDtypeStruct((b, l), i32)
+
+    if kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            batch = {
+                "embeds": jax.ShapeDtypeStruct((gb, seq, cfg.d_model), jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((gb, seq, cfg.n_codebooks), i32),
+            }
+        elif cfg.family == "vlm":
+            n_img = cfg.n_image_tokens
+            batch = {
+                "tokens": tok(gb, seq - n_img),
+                "patch_embeds": jax.ShapeDtypeStruct((gb, n_img, cfg.d_model),
+                                                     jnp.bfloat16),
+                "labels": tok(gb, seq),
+            }
+        else:
+            batch = {"tokens": tok(gb, seq), "labels": tok(gb, seq)}
+        if kind == "prefill":
+            batch.pop("labels")
+        return batch
+
+    # decode: one new token against a seq-length cache
+    if cfg.family == "audio":
+        batch = {"embeds": jax.ShapeDtypeStruct((gb, 1, cfg.d_model), jnp.bfloat16)}
+    else:
+        batch = {"tokens": tok(gb, 1)}
+    cache = jax.eval_shape(lambda: init_cache(cfg, gb, seq))
+    pos = jax.ShapeDtypeStruct((), i32)
+    return batch, cache, pos

@@ -1,0 +1,35 @@
+"""Core library: the paper's contribution — SQL analytics on lightweight-
+compressed columnar data, as composable JAX modules (DESIGN.md §2, §4).
+
+Layers:
+  encodings   — Plain / RLE / Index / Plain+Index / RLE+Index columns & masks
+  primitives  — Table-1 parallel primitives (range_intersect, idx_in_rle, ...)
+  logical     — AND / OR / NOT over MaskColumns (Tables 2-5)
+  arithmetic  — alignment, binary ops, comparisons, selection (§6)
+  groupby     — grouping + run-aware aggregation (§7)
+  join        — sort-merge join / semi-join on encoded columns (§8, TPU-adapted)
+  compress    — §9 encoding-selection heuristics (host-side ingest)
+  table, plan — Table container + jitted query pipelines (App. D rules)
+"""
+from repro.core import arithmetic, compress, groupby, join, logical, plan, primitives
+from repro.core.encodings import (
+    IndexColumn,
+    IndexMask,
+    PlainColumn,
+    PlainIndexColumn,
+    PlainMask,
+    RLEColumn,
+    RLEIndexColumn,
+    RLEIndexMask,
+    RLEMask,
+    decode_column,
+    decode_mask,
+    make_index,
+    make_index_mask,
+    make_plain,
+    make_plain_mask,
+    make_rle,
+    make_rle_mask,
+)
+from repro.core.plan import Query, col
+from repro.core.table import Table

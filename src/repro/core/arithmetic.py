@@ -1,0 +1,301 @@
+"""Arithmetic, comparison and selection on encoded DataColumns (paper §6).
+
+Point-wise binary operations require *Alignment*: positional representations
+of both operands are aligned (runs split, values duplicated), then the op is
+applied to the aligned value tensors. Scalar operands need no alignment —
+the op applies to value tensors directly, preserving the encoding (a key
+win: ``c * 2`` on an RLE column touches only #runs elements).
+"""
+from __future__ import annotations
+
+import operator
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import primitives as prim
+from repro.core.encodings import (
+    POS_DTYPE,
+    IndexColumn,
+    IndexMask,
+    PlainColumn,
+    PlainIndexColumn,
+    PlainMask,
+    RLEColumn,
+    RLEIndexColumn,
+    RLEIndexMask,
+    RLEMask,
+    coverage,
+    decode_column,
+    decode_mask,
+    valid_slots,
+)
+
+OPS = {
+    "add": operator.add, "sub": operator.sub, "mul": operator.mul,
+    "truediv": operator.truediv, "floordiv": operator.floordiv,
+    "lt": operator.lt, "le": operator.le, "gt": operator.gt,
+    "ge": operator.ge, "eq": operator.eq, "ne": operator.ne,
+}
+_CMP = {"lt", "le", "gt", "ge", "eq", "ne"}
+
+
+def _fn(op) -> Callable:
+    return OPS[op] if isinstance(op, str) else op
+
+
+# ---------------------------------------------------------------------------
+# Scalar operand: operate on value tensors, encoding preserved (paper §6)
+# ---------------------------------------------------------------------------
+
+
+def scalar_op(col, op, scalar):
+    """col <op> scalar with no alignment; preserves the encoding."""
+    f = _fn(op)
+    if isinstance(col, PlainColumn):
+        return PlainColumn(values=f(col.decode(), scalar), nrows=col.nrows)
+    if isinstance(col, RLEColumn):
+        return RLEColumn(values=f(col.values, scalar), starts=col.starts,
+                         ends=col.ends, n=col.n, nrows=col.nrows)
+    if isinstance(col, IndexColumn):
+        return IndexColumn(values=f(col.values, scalar), positions=col.positions,
+                           n=col.n, nrows=col.nrows)
+    if isinstance(col, PlainIndexColumn):
+        return PlainColumn(values=f(decode_column(col), scalar), nrows=col.nrows)
+    if isinstance(col, RLEIndexColumn):
+        return RLEIndexColumn(rle=scalar_op(col.rle, op, scalar),
+                              idx=scalar_op(col.idx, op, scalar), nrows=col.nrows)
+    raise TypeError(type(col))
+
+
+# ---------------------------------------------------------------------------
+# Comparison against a literal -> MaskColumn in the column's encoding
+# ---------------------------------------------------------------------------
+
+
+def compare(col, op, literal):
+    """Predicate evaluation (paper §6 + App. D composite-predicate rule).
+
+    For RLE the comparison runs on the *run values* only — whole runs are
+    selected/deselected at once, the core reason filters are cheap on
+    compressed data.
+    """
+    f = _fn(op)
+    if isinstance(col, PlainColumn):
+        return PlainMask(values=f(col.decode(), literal), nrows=col.nrows)
+    if isinstance(col, RLEColumn):
+        keep = f(col.values, literal) & valid_slots(col.n, col.capacity)
+        (s, e), n = prim.compact(keep, (col.starts, col.ends), col.capacity,
+                                 (col.nrows, col.nrows))
+        return RLEMask(starts=s, ends=e, n=n, nrows=col.nrows)
+    if isinstance(col, IndexColumn):
+        keep = f(col.values, literal) & valid_slots(col.n, col.capacity)
+        (p,), n = prim.compact(keep, (col.positions,), col.capacity, (col.nrows,))
+        return IndexMask(positions=p, n=n, nrows=col.nrows)
+    if isinstance(col, PlainIndexColumn):
+        # Evaluate on the centered narrow base (literal shifted by -offset:
+        # the bit-width-reduction trick keeps predicates narrow too), then
+        # patch outlier positions.
+        base_mask = f(col.base.values.astype(jnp.int64) + col.base.offset, literal) \
+            if jnp.issubdtype(col.base.values.dtype, jnp.integer) and col.base.offset != 0 \
+            else f(col.base.values, literal)
+        out_mask = f(col.outliers.values, literal)
+        vals = base_mask.at[col.outliers.positions].set(out_mask, mode="drop")
+        return PlainMask(values=vals, nrows=col.nrows)
+    if isinstance(col, RLEIndexColumn):
+        mr = compare(col.rle, op, literal)
+        mi = compare(col.idx, op, literal)
+        return RLEIndexMask(rle=mr, idx=mi, nrows=col.nrows)
+    raise TypeError(type(col))
+
+
+def compare_range(col, lo, hi, lo_incl=True, hi_incl=True):
+    """Fused range predicate lo <?< col <?< hi (App. D: evaluate all predicates
+    on the RLE value tensor once, apply to positions once)."""
+    f_lo = operator.ge if lo_incl else operator.gt
+    f_hi = operator.le if hi_incl else operator.lt
+    if isinstance(col, RLEColumn):
+        keep = f_lo(col.values, lo) & f_hi(col.values, hi) & valid_slots(col.n, col.capacity)
+        (s, e), n = prim.compact(keep, (col.starts, col.ends), col.capacity,
+                                 (col.nrows, col.nrows))
+        return RLEMask(starts=s, ends=e, n=n, nrows=col.nrows)
+    if isinstance(col, IndexColumn):
+        keep = f_lo(col.values, lo) & f_hi(col.values, hi) & valid_slots(col.n, col.capacity)
+        (p,), n = prim.compact(keep, (col.positions,), col.capacity, (col.nrows,))
+        return IndexMask(positions=p, n=n, nrows=col.nrows)
+    from repro.core.logical import and_masks
+    return and_masks(compare(col, f_lo, lo), compare(col, f_hi, hi))
+
+
+# ---------------------------------------------------------------------------
+# Alignment + binary op between two columns (paper §6, Example 5)
+# ---------------------------------------------------------------------------
+
+
+def binary_op(c1, c2, op):
+    """c1 <op> c2 aligned point-wise over positions common to both columns.
+
+    Output encodings: RLE×RLE -> RLE (runs split at misalignment points);
+    anything×Index -> Index; anything involving Plain -> Plain (per-row values
+    can't stay run-compressed). Rows outside the common coverage hold 0 —
+    liveness is tracked by the plan-level mask (DESIGN.md §4.4).
+    """
+    f = _fn(op)
+    if isinstance(c1, (PlainIndexColumn,)):
+        c1 = PlainColumn(values=decode_column(c1), nrows=c1.nrows)
+    if isinstance(c2, (PlainIndexColumn,)):
+        c2 = PlainColumn(values=decode_column(c2), nrows=c2.nrows)
+    if isinstance(c1, RLEIndexColumn) or isinstance(c2, RLEIndexColumn):
+        # composite: decompose via row-space (simple, correct; composites are
+        # ingest-side encodings, intermediates rarely composite)
+        c1 = PlainColumn(values=decode_column(c1), nrows=c1.nrows)
+        c2 = PlainColumn(values=decode_column(c2), nrows=c2.nrows)
+
+    if isinstance(c1, PlainColumn) and isinstance(c2, PlainColumn):
+        return PlainColumn(values=f(c1.decode(), c2.decode()), nrows=c1.nrows)
+
+    if isinstance(c1, RLEColumn) and isinstance(c2, RLEColumn):
+        cap_out = c1.capacity + c2.capacity
+        s, e, i1, i2, n = prim.range_intersect(
+            c1.starts, c1.ends, c1.n, c2.starts, c2.ends, c2.n, c1.nrows, cap_out)
+        vals = f(c1.values[i1], c2.values[i2])
+        vals = jnp.where(valid_slots(n, cap_out), vals, 0)
+        return RLEColumn(values=vals, starts=s, ends=e, n=n, nrows=c1.nrows)
+
+    if isinstance(c1, RLEColumn) and isinstance(c2, IndexColumn):
+        return _rle_op_index(c1, c2, f, swap=False)
+    if isinstance(c1, IndexColumn) and isinstance(c2, RLEColumn):
+        return _rle_op_index(c2, c1, f, swap=True)
+
+    if isinstance(c1, IndexColumn) and isinstance(c2, IndexColumn):
+        cap_out = min(c1.capacity, c2.capacity)
+        pos, s1, s2, n = prim.idx_in_idx(
+            c1.positions, c1.n, c2.positions, c2.n, c1.nrows, cap_out)
+        vals = f(c1.values[s1], c2.values[s2])
+        vals = jnp.where(valid_slots(n, cap_out), vals, 0)
+        return IndexColumn(values=vals, positions=pos, n=n, nrows=c1.nrows)
+
+    # Plain × RLE / Plain × Index -> per-row result
+    if isinstance(c1, PlainColumn) and isinstance(c2, RLEColumn):
+        vals = f(c1.decode(), decode_column(c2))
+        return PlainColumn(values=vals, nrows=c1.nrows)
+    if isinstance(c1, RLEColumn) and isinstance(c2, PlainColumn):
+        vals = f(decode_column(c1), c2.decode())
+        return PlainColumn(values=vals, nrows=c1.nrows)
+    if isinstance(c1, PlainColumn) and isinstance(c2, IndexColumn):
+        vals = f(c1.decode()[c2.positions], c2.values)
+        vals = jnp.where(valid_slots(c2.n, c2.capacity), vals, 0)
+        return IndexColumn(values=vals, positions=c2.positions, n=c2.n, nrows=c1.nrows)
+    if isinstance(c1, IndexColumn) and isinstance(c2, PlainColumn):
+        vals = f(c1.values, c2.decode()[c1.positions])
+        vals = jnp.where(valid_slots(c1.n, c1.capacity), vals, 0)
+        return IndexColumn(values=vals, positions=c1.positions, n=c1.n, nrows=c1.nrows)
+
+    raise TypeError(f"binary_op not defined for {type(c1)}, {type(c2)}")
+
+
+def _rle_op_index(cr: RLEColumn, ci: IndexColumn, f, swap: bool) -> IndexColumn:
+    """RLE <op> Index: common positions are the index points inside runs."""
+    mask, run_id = prim.idx_in_rle_mask(
+        ci.positions, ci.n, cr.starts, cr.ends, cr.n)
+    rv = cr.values[run_id]
+    vals = f(ci.values, rv) if swap else f(rv, ci.values)
+    (pos, v), n = prim.compact(mask, (ci.positions, vals), ci.capacity, (ci.nrows, 0))
+    return IndexColumn(values=v, positions=pos, n=n, nrows=cr.nrows)
+
+
+# ---------------------------------------------------------------------------
+# Selection: apply a MaskColumn to a DataColumn (paper §6 last paragraph)
+# ---------------------------------------------------------------------------
+
+
+def apply_mask(col, mask):
+    """Restrict a column to masked positions. For RLE/Index columns the
+    alignment *is* the selection (gaps appear; no data movement for rows)."""
+    if isinstance(mask, RLEIndexMask):
+        from repro.core.logical import or_masks  # decompose composite
+        a = apply_mask(col, mask.rle)
+        b = apply_mask(col, mask.idx)
+        return _merge_disjoint(a, b)
+    if isinstance(col, (PlainIndexColumn, RLEIndexColumn)):
+        col = PlainColumn(values=decode_column(col), nrows=col.nrows)
+
+    if isinstance(col, PlainColumn):
+        if isinstance(mask, PlainMask):
+            # values kept as-is; plan-level mask carries liveness (no
+            # compaction under static shapes — fused into downstream ops)
+            return PlainColumn(values=jnp.where(mask.values, col.decode(), 0),
+                               nrows=col.nrows)
+        if isinstance(mask, IndexMask):
+            vals = col.decode().at[mask.positions].get(mode="fill", fill_value=0)
+            vals = jnp.where(valid_slots(mask.n, mask.capacity), vals, 0)
+            return IndexColumn(values=vals, positions=mask.positions, n=mask.n,
+                               nrows=col.nrows)
+        if isinstance(mask, RLEMask):
+            cov = decode_mask(mask)
+            return PlainColumn(values=jnp.where(cov, col.decode(), 0), nrows=col.nrows)
+
+    if isinstance(col, RLEColumn):
+        if isinstance(mask, RLEMask):
+            cap_out = col.capacity + mask.capacity
+            s, e, i1, _, n = prim.range_intersect(
+                col.starts, col.ends, col.n, mask.starts, mask.ends, mask.n,
+                col.nrows, cap_out)
+            vals = jnp.where(valid_slots(n, cap_out), col.values[i1], 0)
+            return RLEColumn(values=vals, starts=s, ends=e, n=n, nrows=col.nrows)
+        if isinstance(mask, IndexMask):
+            m, run_id = prim.idx_in_rle_mask(
+                mask.positions, mask.n, col.starts, col.ends, col.n)
+            vals = col.values[run_id]
+            (pos, v), n = prim.compact(m, (mask.positions, vals), mask.capacity,
+                                       (mask.nrows, 0))
+            return IndexColumn(values=v, positions=pos, n=n, nrows=col.nrows)
+        if isinstance(mask, PlainMask):
+            cov = decode_mask(mask) & coverage(col)
+            return PlainColumn(values=jnp.where(cov, decode_column(col), 0),
+                               nrows=col.nrows)
+
+    if isinstance(col, IndexColumn):
+        if isinstance(mask, RLEMask):
+            m, _ = prim.idx_in_rle_mask(
+                col.positions, col.n, mask.starts, mask.ends, mask.n)
+            (pos, v), n = prim.compact(m, (col.positions, col.values),
+                                       col.capacity, (col.nrows, 0))
+            return IndexColumn(values=v, positions=pos, n=n, nrows=col.nrows)
+        if isinstance(mask, IndexMask):
+            pos, s1, _, n = prim.idx_in_idx(
+                col.positions, col.n, mask.positions, mask.n, col.nrows, col.capacity)
+            vals = jnp.where(valid_slots(n, col.capacity), col.values[s1], 0)
+            return IndexColumn(values=vals, positions=pos, n=n, nrows=col.nrows)
+        if isinstance(mask, PlainMask):
+            sel = mask.values.at[col.positions].get(mode="fill", fill_value=False)
+            keep = sel & valid_slots(col.n, col.capacity)
+            (pos, v), n = prim.compact(keep, (col.positions, col.values),
+                                       col.capacity, (col.nrows, 0))
+            return IndexColumn(values=v, positions=pos, n=n, nrows=col.nrows)
+
+    raise TypeError(f"apply_mask not defined for {type(col)}, {type(mask)}")
+
+
+def _merge_disjoint(a, b):
+    """Merge two disjoint-position encoded columns (RLE+Index composite)."""
+    if isinstance(a, RLEColumn) and isinstance(b, IndexColumn):
+        return RLEIndexColumn(rle=a, idx=b, nrows=a.nrows)
+    if isinstance(a, IndexColumn) and isinstance(b, RLEColumn):
+        return RLEIndexColumn(rle=b, idx=a, nrows=a.nrows)
+    if isinstance(a, PlainColumn) and isinstance(b, PlainColumn):
+        return PlainColumn(values=a.decode() + b.decode(), nrows=a.nrows)
+    if isinstance(a, IndexColumn) and isinstance(b, IndexColumn):
+        cap = a.capacity + b.capacity
+        pos = jnp.concatenate([a.positions, b.positions])
+        vals = jnp.concatenate([a.values, b.values])
+        order = jnp.argsort(pos)
+        pos, vals = pos[order], vals[order]
+        n = a.n + b.n
+        return IndexColumn(values=vals, positions=pos, n=n, nrows=a.nrows)
+    # fall back to rows
+    va = decode_column(a)
+    vb = decode_column(b)
+    ca = coverage(a)
+    return PlainColumn(values=jnp.where(ca, va, vb.astype(va.dtype)), nrows=a.nrows)

@@ -1,0 +1,215 @@
+"""Encoding selection & ingest-time compression (paper §9 heuristics + §3.2).
+
+Conversion is done offline/at-ingest on the host (numpy), exactly as TQP does
+(§2.1: "The conversion step is done offline, before running queries").
+
+Heuristics (paper §9, verbatim):
+  * columns under ``plain_threshold`` rows  -> Plain
+  * RLE compression ratio > ``rle_ratio``   -> RLE
+  * many unit runs but long runs still give ratio > threshold -> RLE+Index
+  * trimming top/bottom 5% permits a narrower dtype -> Plain+Index
+  * else Plain (possibly centered for bit-width reduction)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.encodings import (
+    IndexColumn,
+    PlainColumn,
+    PlainIndexColumn,
+    RLEColumn,
+    RLEIndexColumn,
+    make_index,
+    make_plain,
+    make_rle,
+)
+
+
+@dataclasses.dataclass
+class CompressionConfig:
+    plain_threshold: int = 1_000_000  # paper: columns under 1M rows use Plain
+    rle_ratio: float = 20.0  # paper: RLE if compression ratio > 20
+    min_run: int = 4  # RLE+Index: runs >= min_run stay RLE
+    outlier_frac: float = 0.05  # Plain+Index: trim top/bottom 5%
+    capacity_slack: float = 1.0  # headroom multiplier on encoded capacities
+    force: Optional[str] = None  # force an encoding (tests/benchmarks)
+
+
+@dataclasses.dataclass
+class ColumnStats:
+    nrows: int
+    n_runs: int
+    rle_ratio: float
+    n_long_runs: int
+    long_run_rows: int
+    dtype: np.dtype
+    vmin: float
+    vmax: float
+
+
+def analyze(values: np.ndarray, min_run: int = 4) -> ColumnStats:
+    values = np.asarray(values)
+    n = len(values)
+    if n == 0:
+        return ColumnStats(0, 0, 0.0, 0, 0, values.dtype, 0, 0)
+    change = np.empty(n, dtype=bool)
+    change[0] = True
+    np.not_equal(values[1:], values[:-1], out=change[1:])
+    starts = np.flatnonzero(change)
+    ends = np.concatenate([starts[1:] - 1, [n - 1]])
+    lengths = ends - starts + 1
+    long_mask = lengths >= min_run
+    return ColumnStats(
+        nrows=n, n_runs=len(starts), rle_ratio=n / max(len(starts), 1),
+        n_long_runs=int(long_mask.sum()), long_run_rows=int(lengths[long_mask].sum()),
+        dtype=values.dtype, vmin=float(values.min()), vmax=float(values.max()),
+    )
+
+
+def _narrow_int_dtype(lo: float, hi: float):
+    """Smallest signed int dtype covering [lo, hi] after mid-range centering."""
+    center = (lo + hi) / 2
+    span = max(abs(lo - center), abs(hi - center))
+    for dt in (np.int8, np.int16, np.int32):
+        if span <= np.iinfo(dt).max:
+            return np.dtype(dt)
+    return np.dtype(np.int64)
+
+
+def choose_encoding(stats: ColumnStats, cfg: CompressionConfig) -> str:
+    """Returns one of plain|rle|rle_index|plain_index (paper §9)."""
+    if cfg.force:
+        return cfg.force
+    if stats.nrows < cfg.plain_threshold:
+        return "plain"
+    if stats.rle_ratio > cfg.rle_ratio:
+        return "rle"
+    # many unit runs, but long runs alone still give ratio > threshold
+    if stats.n_long_runs > 0:
+        impure_rows = stats.nrows - stats.long_run_rows
+        # composite cost: long runs as RLE triples + impure rows as index pairs
+        approx_entries = stats.n_long_runs + impure_rows
+        if approx_entries > 0 and stats.nrows / approx_entries > cfg.rle_ratio:
+            return "rle_index"
+    if np.issubdtype(stats.dtype, np.integer):
+        wide = np.dtype(stats.dtype).itemsize
+        narrow = _narrow_int_dtype(stats.vmin, stats.vmax).itemsize
+        if narrow < wide:
+            return "plain"  # centered plain (bit-width reduction, no outliers)
+        return "plain_index_check"
+    return "plain"
+
+
+def encode(values: np.ndarray, cfg: CompressionConfig = CompressionConfig(),
+           encoding: Optional[str] = None):
+    """Encode a host array into an encoded column (jnp buffers).
+
+    Value-domain note (DESIGN.md §3/§9): the device value domain is
+    int32 / float32. Integers outside int32 must be dictionary-encoded first
+    (``Table.from_arrays`` does this automatically); float64 is narrowed to
+    float32 exactly as TQP narrows decimals to floats (paper §2.1).
+    """
+    values = np.asarray(values)
+    if values.dtype.kind == "i" and (
+            values.size and (values.min() < np.iinfo(np.int32).min
+                             or values.max() > np.iinfo(np.int32).max)):
+        raise ValueError(
+            "integer column exceeds the int32 device value domain; "
+            "dictionary-encode first (Table.from_arrays does this)")
+    if values.dtype == np.float64:
+        values = values.astype(np.float32)
+    n = len(values)
+    stats = analyze(values, cfg.min_run)
+    enc = encoding or choose_encoding(stats, cfg)
+
+    if enc == "plain_index_check":
+        enc = _try_plain_index(values, stats, cfg)
+
+    if enc == "plain":
+        if np.issubdtype(values.dtype, np.integer):
+            ndt = _narrow_int_dtype(stats.vmin, stats.vmax)
+            if ndt.itemsize < values.dtype.itemsize:
+                center = int((stats.vmin + stats.vmax) // 2)
+                return make_plain((values.astype(np.int64) - center).astype(ndt),
+                                  nrows=n, offset=center)
+        return make_plain(values, nrows=n)
+
+    if enc == "rle":
+        change = np.empty(n, dtype=bool)
+        change[0] = True
+        np.not_equal(values[1:], values[:-1], out=change[1:])
+        starts = np.flatnonzero(change)
+        ends = np.concatenate([starts[1:] - 1, [n - 1]])
+        cap = max(int(len(starts) * cfg.capacity_slack), len(starts))
+        return make_rle(values[starts], starts, ends, nrows=n, capacity=cap)
+
+    if enc == "index":
+        return make_index(values, np.arange(n), nrows=n)
+
+    if enc == "rle_index":
+        change = np.empty(n, dtype=bool)
+        change[0] = True
+        np.not_equal(values[1:], values[:-1], out=change[1:])
+        starts = np.flatnonzero(change)
+        ends = np.concatenate([starts[1:] - 1, [n - 1]])
+        lengths = ends - starts + 1
+        long = lengths >= cfg.min_run
+        rle = make_rle(values[starts[long]], starts[long], ends[long], nrows=n)
+        short_starts, short_lens = starts[~long], lengths[~long]
+        pos = np.concatenate(
+            [np.arange(s, s + l) for s, l in zip(short_starts, short_lens)]
+        ) if len(short_starts) else np.zeros((0,), np.int64)
+        idx = make_index(values[pos] if len(pos) else np.zeros((0,), values.dtype),
+                         pos, nrows=n)
+        return RLEIndexColumn(rle=rle, idx=idx, nrows=n)
+
+    if enc == "plain_index":
+        lo = np.quantile(values, cfg.outlier_frac)
+        hi = np.quantile(values, 1 - cfg.outlier_frac)
+        if np.issubdtype(values.dtype, np.integer):
+            lo, hi = int(np.floor(lo)), int(np.ceil(hi))
+        inlier = (values >= lo) & (values <= hi)
+        center = int((lo + hi) // 2) if np.issubdtype(values.dtype, np.integer) else (lo + hi) / 2
+        ndt = _narrow_int_dtype(lo, hi) if np.issubdtype(values.dtype, np.integer) else values.dtype
+        base = np.where(inlier, values - center, 0).astype(ndt)
+        out_pos = np.flatnonzero(~inlier)
+        outliers = make_index(values[out_pos], out_pos, nrows=n)
+        return PlainIndexColumn(base=make_plain(base, nrows=n, offset=center),
+                                outliers=outliers, nrows=n)
+
+    raise ValueError(f"unknown encoding {enc}")
+
+
+def _try_plain_index(values, stats, cfg) -> str:
+    lo = np.quantile(values, cfg.outlier_frac)
+    hi = np.quantile(values, 1 - cfg.outlier_frac)
+    narrow = _narrow_int_dtype(lo, hi)
+    if narrow.itemsize < np.dtype(values.dtype).itemsize:
+        return "plain_index"
+    return "plain"
+
+
+def dictionary_encode(values: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Value+dictionary encoding for strings/categoricals (paper §2.1)."""
+    dictionary, codes = np.unique(values, return_inverse=True)
+    return codes.astype(np.int32), dictionary
+
+
+def encoded_nbytes(col) -> int:
+    """In-memory footprint of an encoded column (for Fig. 10/19 benches)."""
+    if isinstance(col, PlainColumn):
+        return col.values.size * col.values.dtype.itemsize
+    if isinstance(col, RLEColumn):
+        return sum(int(a.size * a.dtype.itemsize) for a in (col.values, col.starts, col.ends))
+    if isinstance(col, IndexColumn):
+        return sum(int(a.size * a.dtype.itemsize) for a in (col.values, col.positions))
+    if isinstance(col, PlainIndexColumn):
+        return encoded_nbytes(col.base) + encoded_nbytes(col.outliers)
+    if isinstance(col, RLEIndexColumn):
+        return encoded_nbytes(col.rle) + encoded_nbytes(col.idx)
+    raise TypeError(type(col))

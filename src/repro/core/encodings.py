@@ -1,0 +1,393 @@
+"""Encoded column/mask representations (paper §3).
+
+Every encoding is a JAX pytree (registered dataclass) with:
+  * static metadata: ``nrows`` (logical row count of the column), ``capacity``
+    (max number of runs / index points the buffers can hold),
+  * array leaves: fixed-``capacity`` buffers plus a dynamic scalar ``n`` count.
+
+Padding convention (the *sentinel invariant*): slots at positions >= n hold
+``starts = ends = nrows`` (RLE) or ``positions = nrows`` (Index) and
+``values = 0``.  Because every valid position is < nrows, the sentinel keeps
+the buffers sorted, which lets ``searchsorted``-based primitives operate on the
+whole fixed-size buffer without masking the tail first.
+
+The paper's PyTorch implementation uses dynamically sized tensors; the
+capacity+count scheme is the TPU/XLA adaptation (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Positions use int32 by default: TPU has no native int64 ALU path and all
+# target columns have nrows < 2**31 (DESIGN.md §3).
+POS_DTYPE = jnp.int32
+
+
+def _register(cls):
+    """Register a dataclass as a pytree with static/dynamic field split."""
+    data_fields = [f.name for f in dataclasses.fields(cls) if f.metadata.get("pytree", True)]
+    meta_fields = [f.name for f in dataclasses.fields(cls) if not f.metadata.get("pytree", True)]
+    return jax.tree_util.register_dataclass(cls, data_fields=data_fields, meta_fields=meta_fields)
+
+
+def static(**kw):
+    return dataclasses.field(metadata={"pytree": False}, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Data columns
+# ---------------------------------------------------------------------------
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class PlainColumn:
+    """Plain (uncompressed) column: 1:1 row-to-slot mapping (paper §3.1).
+
+    ``offset`` implements the paper's §3.2 *centering* for bit-width reduction:
+    logical value = values.astype(wide) + offset. offset == 0 for uncentered.
+    """
+
+    values: jax.Array
+    nrows: int = static(default=0)
+    offset: Any = static(default=0)
+
+    @property
+    def capacity(self) -> int:
+        return self.values.shape[0]
+
+    def decode(self) -> jax.Array:
+        """Materialize logical values (wide dtype).
+
+        The device value domain is int32 (DESIGN.md §3) — wider integers are
+        dictionary-encoded at ingest — so centering always widens to int32.
+        """
+        v = self.values
+        if self.offset != 0:
+            v = v.astype(jnp.int32 if jnp.issubdtype(v.dtype, jnp.integer) else v.dtype)
+            v = v + self.offset
+        return v
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class RLEColumn:
+    """Run-length encoded column: (values, starts, ends, n) (paper §3.1).
+
+    Runs are sorted by start, non-overlapping; slot i covers rows
+    starts[i]..ends[i] inclusive. Gaps are allowed (post-filter columns).
+    """
+
+    values: jax.Array
+    starts: jax.Array
+    ends: jax.Array
+    n: jax.Array  # scalar int32: number of valid runs
+    nrows: int = static(default=0)
+
+    @property
+    def capacity(self) -> int:
+        return self.starts.shape[0]
+
+    @property
+    def lengths(self) -> jax.Array:
+        """Run lengths (0 for padding slots)."""
+        valid = jnp.arange(self.capacity) < self.n
+        return jnp.where(valid, self.ends - self.starts + 1, 0)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class IndexColumn:
+    """Index-encoded column: (values, positions, n), sorted positions (§3.1)."""
+
+    values: jax.Array
+    positions: jax.Array
+    n: jax.Array
+    nrows: int = static(default=0)
+
+    @property
+    def capacity(self) -> int:
+        return self.positions.shape[0]
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class PlainIndexColumn:
+    """Composite Plain + Index (paper §3.2): narrow-dtype base + outliers.
+
+    base.values is the narrow tensor (centered via base.offset); outlier rows'
+    base slots hold 0 (never read). outliers.values carries the wide values.
+    """
+
+    base: PlainColumn
+    outliers: IndexColumn
+    nrows: int = static(default=0)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class RLEIndexColumn:
+    """Composite RLE + Index (paper §3.2): pure runs + impure singletons.
+
+    Positions covered by ``rle`` and ``idx`` are disjoint.
+    """
+
+    rle: RLEColumn
+    idx: IndexColumn
+    nrows: int = static(default=0)
+
+
+# ---------------------------------------------------------------------------
+# Mask columns (paper §3.3): value domain {T, F}; position-explicit encodings
+# store only T positions and elide the value tensor.
+# ---------------------------------------------------------------------------
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class PlainMask:
+    values: jax.Array  # bool[nrows]
+    nrows: int = static(default=0)
+
+    @property
+    def capacity(self) -> int:
+        return self.values.shape[0]
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class RLEMask:
+    starts: jax.Array
+    ends: jax.Array
+    n: jax.Array
+    nrows: int = static(default=0)
+
+    @property
+    def capacity(self) -> int:
+        return self.starts.shape[0]
+
+    @property
+    def lengths(self) -> jax.Array:
+        valid = jnp.arange(self.capacity) < self.n
+        return jnp.where(valid, self.ends - self.starts + 1, 0)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class IndexMask:
+    positions: jax.Array
+    n: jax.Array
+    nrows: int = static(default=0)
+
+    @property
+    def capacity(self) -> int:
+        return self.positions.shape[0]
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class RLEIndexMask:
+    rle: RLEMask
+    idx: IndexMask
+    nrows: int = static(default=0)
+
+
+DataColumn = (PlainColumn, RLEColumn, IndexColumn, PlainIndexColumn, RLEIndexColumn)
+MaskColumn = (PlainMask, RLEMask, IndexMask, RLEIndexMask)
+
+
+# ---------------------------------------------------------------------------
+# Constructors
+# ---------------------------------------------------------------------------
+
+
+def _as_pos(x) -> jax.Array:
+    return jnp.asarray(x, dtype=POS_DTYPE)
+
+
+def make_plain(values, nrows: Optional[int] = None, offset=0) -> PlainColumn:
+    values = jnp.asarray(values)
+    return PlainColumn(values=values, nrows=int(nrows if nrows is not None else values.shape[0]), offset=offset)
+
+
+def make_rle(values, starts, ends, nrows: int, n=None, capacity: Optional[int] = None) -> RLEColumn:
+    """Build an RLEColumn from (possibly unpadded) host/np arrays."""
+    values = jnp.asarray(values)
+    starts, ends = _as_pos(starts), _as_pos(ends)
+    k = starts.shape[0]
+    n = jnp.asarray(k if n is None else n, jnp.int32)
+    cap = capacity or k
+    if cap > k:
+        pad = cap - k
+        values = jnp.concatenate([values, jnp.zeros((pad,), values.dtype)])
+        starts = jnp.concatenate([starts, jnp.full((pad,), nrows, POS_DTYPE)])
+        ends = jnp.concatenate([ends, jnp.full((pad,), nrows, POS_DTYPE)])
+    return RLEColumn(values=values, starts=starts, ends=ends, n=n, nrows=nrows)
+
+
+def make_index(values, positions, nrows: int, n=None, capacity: Optional[int] = None) -> IndexColumn:
+    values = jnp.asarray(values)
+    positions = _as_pos(positions)
+    k = positions.shape[0]
+    n = jnp.asarray(k if n is None else n, jnp.int32)
+    cap = capacity or k
+    if cap > k:
+        pad = cap - k
+        values = jnp.concatenate([values, jnp.zeros((pad,), values.dtype)])
+        positions = jnp.concatenate([positions, jnp.full((pad,), nrows, POS_DTYPE)])
+    return IndexColumn(values=values, positions=positions, n=n, nrows=nrows)
+
+
+def make_rle_mask(starts, ends, nrows: int, n=None, capacity: Optional[int] = None) -> RLEMask:
+    c = make_rle(jnp.zeros((len(starts),), jnp.int8), starts, ends, nrows, n, capacity)
+    return RLEMask(starts=c.starts, ends=c.ends, n=c.n, nrows=nrows)
+
+
+def make_index_mask(positions, nrows: int, n=None, capacity: Optional[int] = None) -> IndexMask:
+    c = make_index(jnp.zeros((len(positions),), jnp.int8), positions, nrows, n, capacity)
+    return IndexMask(positions=c.positions, n=c.n, nrows=nrows)
+
+
+def make_plain_mask(values, nrows: Optional[int] = None) -> PlainMask:
+    values = jnp.asarray(values, jnp.bool_)
+    return PlainMask(values=values, nrows=int(nrows if nrows is not None else values.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# Padding / slicing helpers used throughout the primitives
+# ---------------------------------------------------------------------------
+
+
+def valid_slots(n: jax.Array, capacity: int) -> jax.Array:
+    """Boolean [capacity] mask of valid slots."""
+    return jnp.arange(capacity) < n
+
+
+def pad_positions(pos: jax.Array, n: jax.Array, nrows: int) -> jax.Array:
+    """Force sentinel on invalid tail slots (restores sorted invariant)."""
+    return jnp.where(valid_slots(n, pos.shape[0]), pos, jnp.asarray(nrows, pos.dtype))
+
+
+def with_capacity_1d(x: jax.Array, cap: int, fill) -> jax.Array:
+    """Pad or truncate a 1-D array to ``cap`` with ``fill``."""
+    k = x.shape[0]
+    if k == cap:
+        return x
+    if k > cap:
+        return x[:cap]
+    return jnp.concatenate([x, jnp.full((cap - k,), fill, x.dtype)])
+
+
+# ---------------------------------------------------------------------------
+# Decoding to plain (reference materialization; used by tests and as the
+# rle_to_plain / idx_to_plain conversion primitives' core).
+# ---------------------------------------------------------------------------
+
+
+def _run_id_per_row(starts, n, nrows: int) -> jax.Array:
+    """run id covering-or-preceding each row: cumsum of start deltas, O(n).
+
+    The scatter+cumsum formulation replaces one binary search PER ROW with
+    two O(runs) scatters + one O(n) prefix sum — ~40x faster on the XLA
+    CPU backend and the same asymptotics on TPU (cumsum = efficient
+    reduce-window). Sentinel starts (== nrows) drop out of range.
+    """
+    valid = valid_slots(n, starts.shape[0])
+    delta = jnp.zeros((nrows + 1,), POS_DTYPE).at[starts].add(
+        jnp.where(valid, 1, 0), mode="drop")
+    return jnp.cumsum(delta[:nrows]) - 1  # -1 before the first run
+
+
+def decode_rle_values(col: RLEColumn, fill=0) -> jax.Array:
+    """Expand RLE to a dense [nrows] value array (gaps -> fill).
+
+    One cumsum total: coverage is derived from the run id (row <= run end)
+    instead of a second delta sweep — on the CPU backend every 2M-row pass
+    is ~4 ms, so pass count is the whole game."""
+    run_raw = _run_id_per_row(col.starts, col.n, col.nrows)
+    run = jnp.clip(run_raw, 0, col.capacity - 1).astype(POS_DTYPE)
+    rows = jnp.arange(col.nrows, dtype=POS_DTYPE)
+    cov = (run_raw >= 0) & (rows <= col.ends[run]) & (run_raw < col.n)
+    vals = col.values[run]
+    return jnp.where(cov, vals, jnp.asarray(fill, vals.dtype))
+
+
+def decode_rle_coverage(starts, ends, n, nrows: int) -> jax.Array:
+    """Boolean [nrows]: true where some run covers the row. O(n) sweep:
+    +1 at run starts, -1 after run ends, prefix sum > 0."""
+    valid = valid_slots(n, starts.shape[0])
+    one = jnp.where(valid, 1, 0)
+    delta = jnp.zeros((nrows + 1,), POS_DTYPE)
+    delta = delta.at[starts].add(one, mode="drop")
+    delta = delta.at[ends + 1].add(-one, mode="drop")
+    return jnp.cumsum(delta[:nrows]) > 0
+
+
+def decode_index_values(col: IndexColumn, fill=0) -> jax.Array:
+    # Sentinel slots hold positions == nrows, which fall outside the output
+    # and are dropped by mode="drop".
+    out = jnp.full((col.nrows,), fill, col.values.dtype)
+    return out.at[col.positions].set(col.values, mode="drop")
+
+
+def decode_index_coverage(positions, n, nrows: int) -> jax.Array:
+    out = jnp.zeros((nrows,), jnp.bool_)
+    valid = valid_slots(n, positions.shape[0])
+    return out.at[positions].set(valid, mode="drop")
+
+
+def decode_mask(m) -> jax.Array:
+    """Materialize any mask to bool[nrows]."""
+    if isinstance(m, PlainMask):
+        return m.values
+    if isinstance(m, RLEMask):
+        return decode_rle_coverage(m.starts, m.ends, m.n, m.nrows)
+    if isinstance(m, IndexMask):
+        return decode_index_coverage(m.positions, m.n, m.nrows)
+    if isinstance(m, RLEIndexMask):
+        return decode_mask(m.rle) | decode_mask(m.idx)
+    raise TypeError(f"not a mask: {type(m)}")
+
+
+def decode_column(c, fill=0) -> jax.Array:
+    """Materialize any data column to dense [nrows] values (gaps -> fill)."""
+    if isinstance(c, PlainColumn):
+        return c.decode()
+    if isinstance(c, RLEColumn):
+        return decode_rle_values(c, fill)
+    if isinstance(c, IndexColumn):
+        return decode_index_values(c, fill)
+    if isinstance(c, PlainIndexColumn):
+        base = c.base.decode()
+        cov = decode_index_coverage(c.outliers.positions, c.outliers.n, c.nrows)
+        out_vals = decode_index_values(c.outliers, 0)
+        return jnp.where(cov, out_vals.astype(base.dtype), base)
+    if isinstance(c, RLEIndexColumn):
+        rle_vals = decode_rle_values(c.rle, fill)
+        rle_cov = decode_rle_coverage(c.rle.starts, c.rle.ends, c.rle.n, c.nrows)
+        idx_cov = decode_index_coverage(c.idx.positions, c.idx.n, c.nrows)
+        idx_vals = decode_index_values(c.idx, 0)
+        out = jnp.where(rle_cov, rle_vals, jnp.asarray(fill, rle_vals.dtype))
+        return jnp.where(idx_cov, idx_vals.astype(out.dtype), out)
+    raise TypeError(f"not a data column: {type(c)}")
+
+
+def coverage(c) -> jax.Array:
+    """Boolean [nrows] of rows present in the (possibly gapped) column."""
+    if isinstance(c, PlainColumn):
+        return jnp.ones((c.nrows,), jnp.bool_)
+    if isinstance(c, RLEColumn):
+        return decode_rle_coverage(c.starts, c.ends, c.n, c.nrows)
+    if isinstance(c, IndexColumn):
+        return decode_index_coverage(c.positions, c.n, c.nrows)
+    if isinstance(c, PlainIndexColumn):
+        return jnp.ones((c.nrows,), jnp.bool_)
+    if isinstance(c, RLEIndexColumn):
+        return coverage(c.rle) | coverage(c.idx)
+    raise TypeError(f"not a data column: {type(c)}")

@@ -1,0 +1,319 @@
+"""Group-by aggregation on encoded columns (paper §7 + Appendix A.2).
+
+Two phases: *Grouping* (inverse index over unique group-key tuples) and
+*Aggregating* (segment reductions). The challenge the paper highlights —
+heterogeneous encodings across group-by / aggregate columns — is solved by the
+Alignment step (§6): all participating columns are brought onto a common
+segmentation first.
+
+Run-aware aggregation rewrites (paper §7.2):
+  COUNT = Σ run_lengths           (never expands runs)
+  SUM   = Σ value · run_length
+  MIN/MAX = over value tensor only
+  AVG/STD/VAR = post-processing over SUM / COUNT / SUM-of-squares
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import primitives as prim
+from repro.core.encodings import (
+    POS_DTYPE,
+    IndexColumn,
+    IndexMask,
+    PlainColumn,
+    PlainIndexColumn,
+    PlainMask,
+    RLEColumn,
+    RLEIndexColumn,
+    RLEIndexMask,
+    RLEMask,
+    coverage,
+    decode_column,
+    decode_mask,
+    valid_slots,
+)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SegmentView:
+    """Aligned view: per-segment values for every column + segment lengths.
+
+    ``starts``/``ends`` are the row ranges of the segments (run-level path)
+    or per-row unit ranges (row-level fallback) — the hybrid group-by path
+    uses them to scatter Plain aggregate rows onto run-level group ids."""
+
+    values: Dict[str, jax.Array]
+    lengths: jax.Array  # rows per segment
+    valid: jax.Array  # bool per segment
+    n: jax.Array  # number of valid segments
+    starts: jax.Array
+    ends: jax.Array
+
+
+def _is_position_explicit(c) -> bool:
+    return isinstance(c, (RLEColumn, IndexColumn))
+
+
+def _as_runs(c):
+    """(values, starts, ends, n) — Index columns become unit-length runs."""
+    if isinstance(c, RLEColumn):
+        return c.values, c.starts, c.ends, c.n
+    if isinstance(c, IndexColumn):
+        return c.values, c.positions, c.positions, c.n
+    raise TypeError(type(c))
+
+
+def _mask_as_runs(m, nrows):
+    if isinstance(m, RLEMask):
+        return m.starts, m.ends, m.n
+    if isinstance(m, IndexMask):
+        return m.positions, m.positions, m.n
+    raise TypeError(type(m))
+
+
+def align_columns(cols: Dict[str, object], mask=None) -> SegmentView:
+    """Bring heterogeneously encoded columns onto one segmentation (§6).
+
+    Fast path (the paper's headline case): all columns position-explicit
+    (RLE / Index) -> chained ``range_intersect`` keeps the result run-level —
+    segment count is O(Σ runs), never O(rows). Any Plain participant forces
+    row-level segmentation (lengths == 1), matching the paper's observation
+    that Plain columns dictate per-row processing.
+    """
+    items = list(cols.items())
+    run_ok = all(_is_position_explicit(c) for _, c in items) and (
+        mask is None or isinstance(mask, (RLEMask, IndexMask)))
+    nrows = items[0][1].nrows
+
+    if run_ok:
+        cap_total = sum(c.capacity for _, c in items)
+        if mask is not None:
+            cap_total += mask.capacity
+        name0, c0 = items[0]
+        v0, s, e, n = _as_runs(c0)
+        gathered = {name0: jnp.arange(c0.capacity, dtype=POS_DTYPE)}
+        src_vals = {name0: v0}
+        # widen to cap_total once
+        s = prim.pad_positions(jnp.resize(s, (s.shape[0],)), n, nrows)
+        cur_cap = s.shape[0]
+        cur_idx = {name0: jnp.arange(cur_cap, dtype=POS_DTYPE)}
+        cur_s, cur_e, cur_n = s, e, n
+        for name, c in items[1:]:
+            v, cs, ce, cn = _as_runs(c)
+            src_vals[name] = v
+            out_cap = min(cap_total, cur_cap + c.capacity)
+            ns, ne, i_cur, i_col, nn = prim.range_intersect(
+                cur_s, cur_e, cur_n, cs, ce, cn, nrows, out_cap)
+            cur_idx = {k: idx[i_cur] for k, idx in cur_idx.items()}
+            cur_idx[name] = i_col
+            cur_s, cur_e, cur_n, cur_cap = ns, ne, nn, out_cap
+        if mask is not None:
+            ms, me, mn = _mask_as_runs(mask, nrows)
+            out_cap = cap_total
+            ns, ne, i_cur, _, nn = prim.range_intersect(
+                cur_s, cur_e, cur_n, ms, me, mn, nrows, out_cap)
+            cur_idx = {k: idx[i_cur] for k, idx in cur_idx.items()}
+            cur_s, cur_e, cur_n, cur_cap = ns, ne, nn, out_cap
+        valid = valid_slots(cur_n, cur_cap)
+        lengths = jnp.where(valid, cur_e - cur_s + 1, 0)
+        values = {k: jnp.where(valid, src_vals[k][cur_idx[k]], 0) for k in cur_idx}
+        return SegmentView(values=values, lengths=lengths, valid=valid,
+                           n=cur_n, starts=cur_s, ends=cur_e)
+
+    # Row-level fallback: any Plain participant (or Plain mask).
+    live = jnp.ones((nrows,), jnp.bool_)
+    values = {}
+    for name, c in items:
+        values[name] = decode_column(c)
+        if not isinstance(c, (PlainColumn, PlainIndexColumn)):
+            live = live & coverage(c)
+    if mask is not None:
+        live = live & decode_mask(mask)
+    lengths = jnp.where(live, 1, 0)
+    rows = jnp.arange(nrows, dtype=POS_DTYPE)
+    return SegmentView(values=values, lengths=lengths, valid=live,
+                       n=jnp.sum(lengths).astype(jnp.int32),
+                       starts=rows, ends=rows)
+
+
+# ---------------------------------------------------------------------------
+# Grouping phase (paper §7.1)
+# ---------------------------------------------------------------------------
+
+
+def grouping(view: SegmentView, group_names: Sequence[str], num_groups_cap: int):
+    """Inverse index per segment over unique group-key tuples.
+
+    Multi-column keys are combined iteratively (id' = id * cap + inv); the
+    combined key gets a final unique pass for dense ids. Returns
+    (gid[segments], num_groups, rep_index[num_groups_cap]).
+    """
+    combined = None
+    for name in group_names:
+        vals = view.values[name]
+        if jnp.issubdtype(vals.dtype, jnp.integer) and vals.dtype != jnp.int32:
+            # centered narrow columns (int8/int16) widen for key arithmetic;
+            # also keeps the sentinel (int32 max) collision-free
+            vals = vals.astype(jnp.int32)
+        _, inv, _ = prim.unique_with_inverse(
+            vals, view.valid, num_groups_cap)
+        # combined-key arithmetic is int32: requires num_groups_cap**n_cols < 2**31
+        inv32 = inv.astype(jnp.int32)
+        combined = inv32 if combined is None else combined * num_groups_cap + inv32
+    _, gid, num_groups = prim.unique_with_inverse(combined, view.valid, num_groups_cap)
+    # representative segment per group (first occurrence) for key recovery
+    seg_ids = jnp.arange(gid.shape[0], dtype=POS_DTYPE)
+    big = jnp.asarray(jnp.iinfo(jnp.int32).max, POS_DTYPE)
+    gid_safe = jnp.where(view.valid, gid, num_groups_cap)
+    rep = jnp.full((num_groups_cap,), big, POS_DTYPE).at[gid_safe].min(
+        seg_ids, mode="drop")
+    return gid_safe, num_groups, rep
+
+
+# ---------------------------------------------------------------------------
+# Aggregating phase (paper §7.2 + A.2)
+# ---------------------------------------------------------------------------
+
+
+def _segsum(values, gid, cap):
+    return jnp.zeros((cap,), values.dtype).at[gid].add(values, mode="drop")
+
+
+def aggregate(view: SegmentView, gid: jax.Array, specs, num_groups_cap: int):
+    """specs: list of (out_name, agg, col_name). agg in
+    sum|count|min|max|avg|var|std. Returns dict out_name -> array[cap]."""
+    out = {}
+    lengths = view.lengths
+    f32 = jnp.float32
+    for out_name, agg, col_name in specs:
+        if agg == "count":
+            out[out_name] = _segsum(lengths.astype(jnp.int32), gid, num_groups_cap)
+            continue
+        v = view.values[col_name]
+        if agg == "sum":
+            # RLE-aware: value × run length (paper's v·l rewrite)
+            out[out_name] = _segsum(
+                v.astype(f32) * lengths.astype(f32), gid, num_groups_cap)
+        elif agg == "min":
+            init = jnp.full((num_groups_cap,), jnp.inf, f32)
+            vv = jnp.where(view.valid, v.astype(f32), jnp.inf)
+            out[out_name] = init.at[gid].min(vv, mode="drop")
+        elif agg == "max":
+            init = jnp.full((num_groups_cap,), -jnp.inf, f32)
+            vv = jnp.where(view.valid, v.astype(f32), -jnp.inf)
+            out[out_name] = init.at[gid].max(vv, mode="drop")
+        elif agg in ("avg", "var", "std"):
+            s = _segsum(v.astype(f32) * lengths.astype(f32), gid, num_groups_cap)
+            c = _segsum(lengths.astype(f32), gid, num_groups_cap)
+            mean = s / jnp.maximum(c, 1)
+            if agg == "avg":
+                out[out_name] = mean
+            else:
+                sq = _segsum((v.astype(f32) ** 2) * lengths.astype(f32), gid,
+                             num_groups_cap)
+                var = sq / jnp.maximum(c, 1) - mean ** 2
+                out[out_name] = var if agg == "var" else jnp.sqrt(jnp.maximum(var, 0))
+        else:
+            raise ValueError(f"unknown agg {agg}")
+    return out
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GroupByResult:
+    keys: Dict[str, jax.Array]  # group key values per group slot
+    aggs: Dict[str, jax.Array]
+    num_groups: jax.Array
+    valid: jax.Array  # [num_groups_cap]
+
+
+def groupby_aggregate(
+    cols: Dict[str, object],
+    group_names: Sequence[str],
+    specs: Sequence[Tuple[str, str, Optional[str]]],
+    num_groups_cap: int,
+    mask=None,
+) -> GroupByResult:
+    """End-to-end §7: align -> group -> aggregate.
+
+    ``cols`` must contain every group and aggregate column. ``specs`` entries
+    are (out_name, agg, col_name) with col_name None for COUNT.
+
+    **Hybrid path** (the paper's §7/A.2 flow): when every GROUP column is
+    position-explicit but some AGGREGATE columns are Plain, grouping runs at
+    run level (unique over O(runs) segments — never the row-level sort) and
+    Plain aggregate rows are scattered straight onto group ids through the
+    O(n) row->segment sweep. This is where the paper's Q1-style wins
+    come from: the expensive part of a group-by is the unique/sort, and
+    compression shrinks it by the run-length factor."""
+    pe = {k: c for k, c in cols.items() if _is_position_explicit(c)}
+    plain = {k: c for k, c in cols.items() if not _is_position_explicit(c)}
+    mask_pe = mask is None or isinstance(mask, (RLEMask, IndexMask))
+    hybrid = plain and mask_pe and all(g in pe for g in group_names)
+
+    if not hybrid:
+        view = align_columns(dict(cols), mask=mask)
+        gid, num_groups, rep = grouping(view, group_names, num_groups_cap)
+        out = aggregate(view, gid, [(o, a, c) for o, a, c in specs],
+                        num_groups_cap)
+    else:
+        from repro.core.encodings import _run_id_per_row, decode_rle_coverage
+        nrows = next(iter(cols.values())).nrows
+        view = align_columns(pe, mask=mask)  # run-level segments
+        gid, num_groups, rep = grouping(view, group_names, num_groups_cap)
+        run_specs = [(o, a, c) for o, a, c in specs
+                     if c is None or c in view.values]
+        out = aggregate(view, gid, run_specs, num_groups_cap)
+        # row -> segment -> group scatter for Plain aggregate columns
+        seg_of_row = _run_id_per_row(view.starts, view.n, nrows)
+        cov = decode_rle_coverage(view.starts, view.ends, view.n, nrows)
+        seg_c = jnp.clip(seg_of_row, 0, gid.shape[0] - 1)
+        gid_row = jnp.where(cov, gid[seg_c], num_groups_cap)  # drop slot
+        f32 = jnp.float32
+        counts = None
+        for o, a, c in specs:
+            if c is None or c in view.values:
+                continue
+            v = decode_column(plain[c]).astype(f32)
+            if a in ("sum", "avg", "var", "std"):
+                ssum = jnp.zeros((num_groups_cap,), f32).at[gid_row].add(
+                    jnp.where(cov, v, 0.0), mode="drop")
+            if a == "sum":
+                out[o] = ssum
+            elif a == "min":
+                init = jnp.full((num_groups_cap,), jnp.inf, f32)
+                out[o] = init.at[gid_row].min(
+                    jnp.where(cov, v, jnp.inf), mode="drop")
+            elif a == "max":
+                init = jnp.full((num_groups_cap,), -jnp.inf, f32)
+                out[o] = init.at[gid_row].max(
+                    jnp.where(cov, v, -jnp.inf), mode="drop")
+            elif a in ("avg", "var", "std"):
+                if counts is None:
+                    counts = jnp.zeros((num_groups_cap,), f32).at[gid].add(
+                        view.lengths.astype(f32), mode="drop")
+                mean = ssum / jnp.maximum(counts, 1)
+                if a == "avg":
+                    out[o] = mean
+                else:
+                    sq = jnp.zeros((num_groups_cap,), f32).at[gid_row].add(
+                        jnp.where(cov, v * v, 0.0), mode="drop")
+                    var = sq / jnp.maximum(counts, 1) - mean ** 2
+                    out[o] = var if a == "var" else jnp.sqrt(
+                        jnp.maximum(var, 0))
+            else:
+                raise ValueError(a)
+
+    rep_safe = jnp.clip(rep, 0, gid.shape[0] - 1)
+    gvalid = valid_slots(num_groups, num_groups_cap)
+    keys = {
+        name: jnp.where(gvalid, view.values[name][rep_safe], 0)
+        for name in group_names
+    }
+    return GroupByResult(keys=keys, aggs=out, num_groups=num_groups, valid=gvalid)

@@ -1,0 +1,207 @@
+"""Join operations on encoded columns (paper §8 + Appendix A.3).
+
+TPU adaptation (DESIGN.md §3): the paper's GPU hash join becomes a
+*sort-merge* join — the build side is sorted by key (once), probes are two
+``searchsorted`` calls giving per-probe match ranges, and expansion reuses the
+``range_arange`` machinery (Alg. 2). Semantics, including Table 6 Join-Index
+encodings and run-length expansion for one-to-many / many-to-many matches,
+follow the paper.
+
+Join entries operate at the *encoding granularity* (runs for RLE, points for
+Index, rows for Plain): a matching RLE run pair contributes len_l × len_r
+row pairs without being expanded until/unless a consumer needs rows — the
+paper's "treat each run like a single row in the hash table" (§8.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import primitives as prim
+from repro.core.encodings import (
+    POS_DTYPE,
+    IndexColumn,
+    IndexMask,
+    PlainColumn,
+    PlainMask,
+    RLEColumn,
+    RLEMask,
+    valid_slots,
+)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class JoinEntries:
+    """Encoding-granular view of a join column."""
+
+    keys: jax.Array  # key value per entry
+    row_start: jax.Array  # first row covered by the entry
+    length: jax.Array  # rows covered (1 for Plain/Index)
+    n: jax.Array  # valid entries
+
+
+def join_entries(col) -> JoinEntries:
+    if isinstance(col, PlainColumn):
+        nr = col.capacity
+        return JoinEntries(
+            keys=col.decode(),
+            row_start=jnp.arange(nr, dtype=POS_DTYPE),
+            length=jnp.ones((nr,), POS_DTYPE),
+            n=jnp.asarray(nr, jnp.int32),
+        )
+    if isinstance(col, RLEColumn):
+        return JoinEntries(keys=col.values, row_start=col.starts,
+                           length=col.lengths.astype(POS_DTYPE), n=col.n)
+    if isinstance(col, IndexColumn):
+        valid = valid_slots(col.n, col.capacity)
+        return JoinEntries(keys=col.values, row_start=col.positions,
+                           length=jnp.where(valid, 1, 0).astype(POS_DTYPE), n=col.n)
+    raise TypeError(type(col))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class JoinIndex:
+    """Compressed (entry-level) join index: one slot per matching entry pair.
+
+    ``multiplicity`` = len_l × len_r row pairs per slot; the pair expands to
+    rows only on demand (expand_pairs_to_rows). This is the paper's
+    RLE-encoded Join Index (Table 6) in capacity form.
+    """
+
+    left_entry: jax.Array
+    right_entry: jax.Array
+    left_start: jax.Array
+    left_len: jax.Array
+    right_start: jax.Array
+    right_len: jax.Array
+    n: jax.Array  # valid pair count
+    total_rows: jax.Array  # Σ multiplicity
+
+
+def join_index(left, right, cap_pairs: int) -> JoinIndex:
+    """Get Join Index (paper §8.1) via sort-merge probe.
+
+    ``right`` is the build side (sorted by key inside); ``left`` probes.
+    """
+    le = join_entries(left)
+    re_ = join_entries(right)
+    capL, capR = le.keys.shape[0], re_.keys.shape[0]
+    # sort build side by key; sentinel-key invalid entries to the top
+    big = _big_for(re_.keys.dtype)
+    rkey = jnp.where(valid_slots(re_.n, capR), re_.keys, big)
+    order = jnp.argsort(rkey)
+    rk = rkey[order]
+    # probe: match range per left entry
+    lkey = jnp.where(valid_slots(le.n, capL), le.keys, big)
+    lo = jnp.searchsorted(rk, lkey, side="left")
+    hi = jnp.searchsorted(rk, lkey, side="right")
+    cnt = jnp.where(valid_slots(le.n, capL) & (lkey != big), hi - lo, 0)
+    # expand (left_entry, right_sorted_slot) pairs
+    slot, l_ent, valid, n_pairs = prim.range_arange_capped(
+        lo.astype(POS_DTYPE), cnt, cap_pairs)
+    r_ent = order[slot].astype(POS_DTYPE)
+    l_ent = jnp.where(valid, l_ent, 0).astype(POS_DTYPE)
+    r_ent = jnp.where(valid, r_ent, 0)
+    l_len = jnp.where(valid, le.length[l_ent], 0)
+    r_len = jnp.where(valid, re_.length[r_ent], 0)
+    mult = l_len.astype(jnp.int32) * r_len.astype(jnp.int32)
+    return JoinIndex(
+        left_entry=l_ent, right_entry=r_ent,
+        left_start=le.row_start[l_ent], left_len=l_len,
+        right_start=re_.row_start[r_ent], right_len=r_len,
+        n=n_pairs, total_rows=jnp.sum(mult).astype(jnp.int32),
+    )
+
+
+def expand_pairs_to_rows(ji: JoinIndex, cap_rows: int):
+    """Apply Join Index at row granularity (paper §8.2, A.3 steps 2-3).
+
+    Each pair yields len_l × len_r (left_row, right_row) combinations:
+    left varies slowest (matches the paper's run-major duplication order).
+    Returns (left_rows, right_rows, valid, total).
+    """
+    mult = (ji.left_len * ji.right_len).astype(jnp.int32)
+    pair, valid, total = prim.repeat_interleave_capped(mult, cap_rows)
+    offsets = jnp.cumsum(mult)
+    prev = jnp.concatenate([jnp.zeros((1,), offsets.dtype), offsets[:-1]])
+    t = jnp.arange(cap_rows, dtype=offsets.dtype) - prev[pair]
+    rl = jnp.maximum(ji.right_len[pair], 1).astype(t.dtype)
+    l_rows = ji.left_start[pair] + (t // rl).astype(POS_DTYPE)
+    r_rows = ji.right_start[pair] + (t % rl).astype(POS_DTYPE)
+    l_rows = jnp.where(valid, l_rows, 0)
+    r_rows = jnp.where(valid, r_rows, 0)
+    return l_rows, r_rows, valid, total
+
+
+def gather_rows(col, rows: jax.Array, valid: jax.Array):
+    """Apply Join Index to a payload column: fetch values at (unsorted,
+    possibly duplicated) row ids — Table 2's Unsorted-Index extension.
+
+    For RLE payload columns the fetch is a binary search per row (run id ->
+    value), i.e. the column is never decompressed (paper §8.2).
+    """
+    if isinstance(col, PlainColumn):
+        vals = col.decode()[rows]
+    elif isinstance(col, RLEColumn):
+        run = jnp.searchsorted(col.ends, rows, side="left").astype(POS_DTYPE)
+        run = jnp.minimum(run, col.capacity - 1)
+        inside = (rows >= col.starts[run]) & (rows <= col.ends[run]) & (run < col.n)
+        vals = jnp.where(inside, col.values[run], 0)
+    elif isinstance(col, IndexColumn):
+        slot = jnp.searchsorted(col.positions, rows, side="left").astype(POS_DTYPE)
+        slot = jnp.minimum(slot, col.capacity - 1)
+        hit = (col.positions[slot] == rows) & (slot < col.n)
+        vals = jnp.where(hit, col.values[slot], 0)
+    else:
+        raise TypeError(type(col))
+    return jnp.where(valid, vals, 0)
+
+
+# ---------------------------------------------------------------------------
+# Semi-join (the production-workload workhorse: 7-10 semi-joins per query)
+# ---------------------------------------------------------------------------
+
+
+def semi_join_mask(left, right_keys: jax.Array, n_right: jax.Array):
+    """LEFT SEMI JOIN membership mask, in the left column's own encoding.
+
+    ``right_keys`` must be sorted with invalid slots at the top (sentinel).
+    For an RLE left column, membership is decided once per *run* — whole runs
+    pass/fail together (App. D's 'early filtering of entire runs').
+    """
+    def member(keys, kvalid):
+        lo = jnp.searchsorted(right_keys, keys, side="left")
+        lo_c = jnp.minimum(lo, right_keys.shape[0] - 1)
+        return kvalid & (lo < n_right) & (right_keys[lo_c] == keys)
+
+    if isinstance(left, PlainColumn):
+        return PlainMask(values=member(left.decode(), True), nrows=left.nrows)
+    if isinstance(left, RLEColumn):
+        keep = member(left.values, valid_slots(left.n, left.capacity))
+        (s, e), n = prim.compact(keep, (left.starts, left.ends), left.capacity,
+                                 (left.nrows, left.nrows))
+        return RLEMask(starts=s, ends=e, n=n, nrows=left.nrows)
+    if isinstance(left, IndexColumn):
+        keep = member(left.values, valid_slots(left.n, left.capacity))
+        (p,), n = prim.compact(keep, (left.positions,), left.capacity, (left.nrows,))
+        return IndexMask(positions=p, n=n, nrows=left.nrows)
+    raise TypeError(type(left))
+
+
+def sorted_unique_keys(values: jax.Array, valid: jax.Array, cap: int):
+    """Helper to build the right-side key set for semi_join_mask."""
+    uniq, _, n = prim.unique_with_inverse(values, valid, cap)
+    big = _big_for(uniq.dtype)
+    uniq = jnp.where(valid_slots(n, cap), uniq, big)
+    return uniq, n
+
+
+def _big_for(dtype):
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.asarray(jnp.iinfo(dtype).max, dtype)
+    return jnp.asarray(jnp.inf, dtype)

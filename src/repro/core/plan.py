@@ -1,0 +1,397 @@
+"""Query plan layer: composable relational operators over encoded tables.
+
+A ``Query`` stages operators (filter / semi-join / join / group-by) and
+executes them as ONE jitted tensor program — the XLA-fusion upgrade of the
+paper's "load and operate on entire columns" rule (§2.1, DESIGN.md §3).
+
+Appendix D optimization rules implemented here:
+  * predicates on RLE columns are applied before Plain columns
+    (``_predicate_order``),
+  * composite predicates on one RLE column are fused on the value tensor
+    (``compare_range`` / fused compare in arithmetic.py),
+  * semi-joins on RLE columns run before those on Plain columns
+    (RLE-first join ordering),
+  * for RLE group-by columns the filter mask is folded into alignment rather
+    than applied to aggregate columns separately (align_columns does this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import arithmetic, groupby, join as join_mod, logical
+from repro.core.encodings import (
+    IndexColumn,
+    PlainColumn,
+    PlainIndexColumn,
+    RLEColumn,
+    RLEIndexColumn,
+)
+from repro.core.table import Table
+
+
+# --------------------------- predicate expressions -------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Pred:
+    """Leaf predicate: column <op> literal."""
+
+    col: str
+    op: str
+    literal: object
+
+    def __and__(self, other):
+        return And(self, other)
+
+    def __or__(self, other):
+        return Or(self, other)
+
+    def __invert__(self):
+        return Not(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class RangePred:
+    col: str
+    lo: object
+    hi: object
+    lo_incl: bool = True
+    hi_incl: bool = True
+
+    __and__ = Pred.__and__
+    __or__ = Pred.__or__
+    __invert__ = Pred.__invert__
+
+
+@dataclasses.dataclass(frozen=True)
+class And:
+    a: object
+    b: object
+    __and__ = Pred.__and__
+    __or__ = Pred.__or__
+    __invert__ = Pred.__invert__
+
+
+@dataclasses.dataclass(frozen=True)
+class Or:
+    a: object
+    b: object
+    __and__ = Pred.__and__
+    __or__ = Pred.__or__
+    __invert__ = Pred.__invert__
+
+
+@dataclasses.dataclass(frozen=True)
+class Not:
+    a: object
+    __and__ = Pred.__and__
+    __or__ = Pred.__or__
+    __invert__ = Pred.__invert__
+
+
+class _ColRef:
+    def __init__(self, name):
+        self.name = name
+
+    def __gt__(self, v):
+        return Pred(self.name, "gt", v)
+
+    def __ge__(self, v):
+        return Pred(self.name, "ge", v)
+
+    def __lt__(self, v):
+        return Pred(self.name, "lt", v)
+
+    def __le__(self, v):
+        return Pred(self.name, "le", v)
+
+    def __eq__(self, v):  # noqa: A003 - DSL
+        return Pred(self.name, "eq", v)
+
+    def __ne__(self, v):
+        return Pred(self.name, "ne", v)
+
+    def between(self, lo, hi, lo_incl=True, hi_incl=True):
+        return RangePred(self.name, lo, hi, lo_incl, hi_incl)
+
+    def isin(self, values):
+        return Pred(self.name, "isin", tuple(values))
+
+
+def col(name: str) -> _ColRef:
+    return _ColRef(name)
+
+
+# ------------------------------- evaluation --------------------------------
+
+
+def _pred_cols(expr) -> List[str]:
+    if isinstance(expr, (Pred, RangePred)):
+        return [expr.col]
+    if isinstance(expr, (And, Or)):
+        return _pred_cols(expr.a) + _pred_cols(expr.b)
+    if isinstance(expr, Not):
+        return _pred_cols(expr.a)
+    raise TypeError(type(expr))
+
+
+def _rle_first(expr, table: Table):
+    """App. D rule 1: reorder AND children so RLE-column predicates come first."""
+    if isinstance(expr, And):
+        a, b = _rle_first(expr.a, table), _rle_first(expr.b, table)
+        def score(e):
+            cs = _pred_cols(e)
+            encs = [table.encoding_of(c) for c in cs]
+            return 0 if any("RLE" in e for e in encs) else 1
+        if score(b) < score(a):
+            a, b = b, a
+        return And(a, b)
+    if isinstance(expr, Or):
+        return Or(_rle_first(expr.a, table), _rle_first(expr.b, table))
+    if isinstance(expr, Not):
+        return Not(_rle_first(expr.a, table))
+    return expr
+
+
+def eval_predicate(expr, columns: Dict[str, object], table: Optional[Table] = None):
+    """Evaluate a predicate tree to a MaskColumn (device-side)."""
+    if isinstance(expr, Pred):
+        c = columns[expr.col]
+        lit = expr.literal
+        if table is not None and expr.op in ("eq", "ne") and isinstance(lit, str):
+            lit = table.code_for(expr.col, lit)
+        if expr.op == "isin":
+            lits = [table.code_for(expr.col, v) if (table and isinstance(v, str)) else v
+                    for v in lit]
+            m = arithmetic.compare(c, "eq", lits[0])
+            for v in lits[1:]:
+                m = logical.or_masks(m, arithmetic.compare(c, "eq", v))
+            return m
+        return arithmetic.compare(c, expr.op, lit)
+    if isinstance(expr, RangePred):
+        return arithmetic.compare_range(columns[expr.col], expr.lo, expr.hi,
+                                        expr.lo_incl, expr.hi_incl)
+    if isinstance(expr, And):
+        return logical.and_masks(eval_predicate(expr.a, columns, table),
+                                 eval_predicate(expr.b, columns, table))
+    if isinstance(expr, Or):
+        return logical.or_masks(eval_predicate(expr.a, columns, table),
+                                eval_predicate(expr.b, columns, table))
+    if isinstance(expr, Not):
+        return logical.not_mask(eval_predicate(expr.a, columns, table))
+    raise TypeError(type(expr))
+
+
+# --------------------------------- query -----------------------------------
+
+
+@dataclasses.dataclass
+class _FilterOp:
+    expr: object
+
+
+@dataclasses.dataclass
+class _SemiJoinOp:
+    on: str
+    keys: np.ndarray  # host-side key set (from a filtered dimension table)
+
+
+@dataclasses.dataclass
+class _GroupByOp:
+    group: Tuple[str, ...]
+    specs: Tuple[Tuple[str, str, Optional[str]], ...]
+    num_groups_cap: int
+
+
+@dataclasses.dataclass
+class _AggOp:
+    specs: Tuple[Tuple[str, str, Optional[str]], ...]
+
+
+@dataclasses.dataclass
+class _MapOp:
+    out: str
+    fn: object  # columns dict -> column
+
+
+class Query:
+    """Staged relational pipeline over one (fact) table.
+
+    Dimension-table filtering for semi-joins happens eagerly (dimension
+    tables are small — paper §9.2); the fact-table pipeline is jitted as a
+    single program.
+    """
+
+    def __init__(self, table: Table):
+        self.table = table
+        self.ops: List[object] = []
+
+    def filter(self, expr) -> "Query":
+        self.ops.append(_FilterOp(_rle_first(expr, self.table)))
+        return self
+
+    def semi_join(self, on: str, keys) -> "Query":
+        self.ops.append(_SemiJoinOp(on=on, keys=np.asarray(keys)))
+        return self
+
+    def map(self, out: str, fn) -> "Query":
+        self.ops.append(_MapOp(out=out, fn=fn))
+        return self
+
+    def groupby(self, group: Sequence[str], aggs: Dict[str, Tuple[str, Optional[str]]],
+                num_groups_cap: int = 1024) -> "Query":
+        specs = tuple((o, a, c) for o, (a, c) in aggs.items())
+        self.ops.append(_GroupByOp(tuple(group), specs, num_groups_cap))
+        return self
+
+    def aggregate(self, aggs: Dict[str, Tuple[str, Optional[str]]]) -> "Query":
+        specs = tuple((o, a, c) for o, (a, c) in aggs.items())
+        self.ops.append(_AggOp(specs))
+        return self
+
+    # -- execution ----------------------------------------------------------
+
+    def _reorder_semijoins(self):
+        """App. D rule 3: semi-joins on RLE columns before Plain columns."""
+        def key(op):
+            if isinstance(op, _SemiJoinOp):
+                return 0 if "RLE" in self.table.encoding_of(op.on) else 1
+            return -1  # non-semijoin ops keep position
+        # stable partition of consecutive semi-join blocks
+        out, block = [], []
+        for op in self.ops:
+            if isinstance(op, _SemiJoinOp):
+                block.append(op)
+            else:
+                out.extend(sorted(block, key=key))
+                block = []
+                out.append(op)
+        out.extend(sorted(block, key=key))
+        self.ops = out
+
+    def build(self):
+        """Build the jitted program: (columns, key_sets) -> result."""
+        self._reorder_semijoins()
+        ops = list(self.ops)
+        table = self.table
+
+        def program(columns, key_sets):
+            mask = None
+            env = dict(columns)
+            ks = list(key_sets)
+            for op in ops:
+                if isinstance(op, _FilterOp):
+                    m = eval_predicate(op.expr, env, table)
+                    mask = m if mask is None else logical.and_masks(mask, m)
+                elif isinstance(op, _SemiJoinOp):
+                    keys, n_keys = ks.pop(0)
+                    m = join_mod.semi_join_mask(env[op.on], keys, n_keys)
+                    mask = m if mask is None else logical.and_masks(mask, m)
+                elif isinstance(op, _MapOp):
+                    env[op.out] = op.fn(env)
+                elif isinstance(op, _GroupByOp):
+                    needed = set(op.group) | {c for _, _, c in op.specs if c}
+                    sub = {k: env[k] for k in needed}
+                    return groupby.groupby_aggregate(
+                        sub, op.group, op.specs, op.num_groups_cap, mask=mask)
+                elif isinstance(op, _AggOp):
+                    needed = {c for _, _, c in op.specs if c}
+                    out = {}
+                    val_specs = [s for s in op.specs if s[2]]
+                    cnt_specs = [s for s in op.specs if not s[2]]
+                    if needed:
+                        sub = {k: env[k] for k in needed}
+                        view = groupby.align_columns(sub, mask=mask)
+                        gid = jnp.zeros_like(view.lengths)
+                        out.update(groupby.aggregate(
+                            view, gid, val_specs + cnt_specs, 1))
+                    elif cnt_specs:
+                        # COUNT(*) needs no column: it is the mask's
+                        # cardinality (run lengths for RLE — paper §7.2)
+                        card = (_mask_cardinality(mask) if mask is not None
+                                else jnp.asarray(table.nrows, jnp.int32))
+                        for o, _, _ in cnt_specs:
+                            out[o] = card[None]
+                    return {k: v[0] for k, v in out.items()}
+            return mask, env
+        return program
+
+    def run(self, jit: bool = True):
+        """Execute: eager key-set preparation + ONE jitted fact pipeline.
+
+        The jitted program is memoized on the Query: repeated ``run()``
+        calls (warm queries, the paper's measurement mode §9) re-execute
+        the compiled program without retracing.
+        """
+        key_sets = []
+        for op in self.ops:
+            if isinstance(op, _SemiJoinOp):
+                keys = np.unique(op.keys)
+                arr = jnp.asarray(np.concatenate([
+                    keys, np.full((1,), _sentinel_for(keys.dtype), keys.dtype)]))
+                key_sets.append((arr, jnp.asarray(len(keys), jnp.int32)))
+        if not jit:
+            return self.build()(self.table.columns, tuple(key_sets))
+        if getattr(self, "_jitted", None) is None:
+            self._jitted = jax.jit(self.build())
+        return self._jitted(self.table.columns, tuple(key_sets))
+
+
+def _mask_cardinality(m):
+    """Selected-row count without decoding (run lengths for RLE: §7.2)."""
+    from repro.core.encodings import (IndexMask, PlainMask, RLEIndexMask,
+                                      RLEMask)
+    if isinstance(m, PlainMask):
+        return jnp.sum(m.values).astype(jnp.int32)
+    if isinstance(m, RLEMask):
+        return jnp.sum(m.lengths).astype(jnp.int32)
+    if isinstance(m, IndexMask):
+        return m.n.astype(jnp.int32)
+    if isinstance(m, RLEIndexMask):
+        return _mask_cardinality(m.rle) + _mask_cardinality(m.idx)
+    raise TypeError(type(m))
+
+
+def _sentinel_for(dtype):
+    if np.issubdtype(dtype, np.integer):
+        return np.iinfo(dtype).max
+    return np.inf
+
+
+# ------------------------- PK-FK join helper -------------------------------
+
+
+def pk_fk_gather(fact_key_col, dim_keys_sorted: jax.Array, dim_payload: jax.Array,
+                 fill=0):
+    """Star-schema PK-FK join: per fact *entry* (run for RLE / point for Index
+    / row for Plain), fetch the unique-key dimension payload.
+
+    The fact key column is never decompressed: for an RLE fact key, one lookup
+    per run (paper §8.1, 'treating each run like a single row'). Returns a
+    column in the fact key's encoding with payload values.
+    """
+    def lookup(keys):
+        slot = jnp.searchsorted(dim_keys_sorted, keys, side="left")
+        slot_c = jnp.minimum(slot, dim_keys_sorted.shape[0] - 1)
+        hit = dim_keys_sorted[slot_c] == keys
+        vals = dim_payload[slot_c]
+        return jnp.where(hit, vals, jnp.asarray(fill, vals.dtype))
+
+    if isinstance(fact_key_col, PlainColumn):
+        return PlainColumn(values=lookup(fact_key_col.decode()),
+                           nrows=fact_key_col.nrows)
+    if isinstance(fact_key_col, RLEColumn):
+        return RLEColumn(values=lookup(fact_key_col.values),
+                         starts=fact_key_col.starts, ends=fact_key_col.ends,
+                         n=fact_key_col.n, nrows=fact_key_col.nrows)
+    if isinstance(fact_key_col, IndexColumn):
+        return IndexColumn(values=lookup(fact_key_col.values),
+                           positions=fact_key_col.positions, n=fact_key_col.n,
+                           nrows=fact_key_col.nrows)
+    raise TypeError(type(fact_key_col))

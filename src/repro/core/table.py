@@ -1,0 +1,77 @@
+"""Table abstraction: a set of heterogeneously encoded columns (paper §3.3).
+
+Tables are host-side containers; their columns are device pytrees. String
+columns are dictionary-encoded at ingest (codes on device, dictionary on
+host), as in TQP (§2.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import compress
+from repro.core.encodings import decode_column
+
+
+@dataclasses.dataclass
+class Table:
+    columns: Dict[str, object]
+    nrows: int
+    dictionaries: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_arrays(
+        cls,
+        data: Dict[str, np.ndarray],
+        cfg: compress.CompressionConfig = compress.CompressionConfig(),
+        encodings: Optional[Dict[str, str]] = None,
+    ) -> "Table":
+        """Ingest host arrays; choose encodings per the §9 heuristics unless
+        overridden per-column via ``encodings``."""
+        cols, dicts = {}, {}
+        nrows = None
+        for name, arr in data.items():
+            arr = np.asarray(arr)
+            nrows = len(arr) if nrows is None else nrows
+            if len(arr) != nrows:
+                raise ValueError(f"column {name}: length mismatch")
+            wide_int = arr.dtype.kind == "i" and arr.size and (
+                arr.min() < np.iinfo(np.int32).min
+                or arr.max() > np.iinfo(np.int32).max)
+            if arr.dtype.kind in ("U", "S", "O") or wide_int:
+                # strings AND out-of-int32-domain integers are value+dict
+                # encoded (TQP §2.1); codes are int32 on device.
+                codes, dictionary = compress.dictionary_encode(arr)
+                dicts[name] = dictionary
+                arr = codes
+            enc = (encodings or {}).get(name)
+            cols[name] = compress.encode(arr, cfg, encoding=enc)
+        return cls(columns=cols, nrows=nrows or 0, dictionaries=dicts)
+
+    def column(self, name: str):
+        return self.columns[name]
+
+    def decode(self, name: str) -> np.ndarray:
+        """Materialize a column to host values (tests / inspection)."""
+        vals = np.asarray(decode_column(self.columns[name]))
+        if name in self.dictionaries:
+            return self.dictionaries[name][vals]
+        return vals
+
+    def code_for(self, name: str, value):
+        """Dictionary code of a string literal for predicate pushdown."""
+        if name not in self.dictionaries:
+            return value
+        idx = np.searchsorted(self.dictionaries[name], value)
+        d = self.dictionaries[name]
+        if idx >= len(d) or d[idx] != value:
+            return -1  # literal not present: predicate selects nothing
+        return int(idx)
+
+    def nbytes(self) -> int:
+        return sum(compress.encoded_nbytes(c) for c in self.columns.values())
+
+    def encoding_of(self, name: str) -> str:
+        return type(self.columns[name]).__name__

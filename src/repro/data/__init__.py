@@ -1,0 +1,2 @@
+from repro.data.corpus import CorpusConfig, build_synthetic_corpus
+from repro.data.pipeline import DataPipeline, PipelineConfig, corpus_stats

@@ -1,0 +1,133 @@
+"""Gradient compression reusing the paper's encodings (beyond-paper feature).
+
+The paper proposes Index encoding for sparse data and bit-width reduction
+with mid-range centering for dense data (§3.2). Both map exactly onto
+distributed-training gradient compression:
+
+  * ``topk_index``   — top-k magnitude entries as an Index column
+                       (positions int32 + values f32): the sparse gradient
+                       that crosses the data-parallel interconnect.
+  * ``int8_centered`` — the paper's §3.2 scheme verbatim: global mid-range
+                       center, linear int8 quantization, outliers avoided by
+                       construction (gradients are clipped upstream).
+
+Error feedback (Stich et al.) keeps the compression unbiased over time: the
+per-leaf residual of what was dropped/rounded is added back before the next
+compression.
+
+Two integration modes:
+  * ``compress_decompress`` — projection form; composes with pjit (the
+    implicit gradient all-reduce then moves ~frac·bytes for the top-k leaves
+    under a sparse layout; on dense hardware it models the *numerics* while
+    the §Perf collective table models the bytes).
+  * ``allreduce_compressed`` — explicit shard_map collective: per-shard
+    top-k -> all_gather(positions, values) over the data axis -> scatter-add.
+    This is the real compressed collective; wire bytes = 2·k·8 per leaf vs
+    4·n dense.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def init_state(params) -> Dict[str, Any]:
+    """Error-feedback residuals, one per leaf (f32)."""
+    return {"residual": jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+
+def _topk_project(g32: jax.Array, frac: float) -> jax.Array:
+    """Keep the k largest-|.| entries (the Index-encoded payload), zero rest."""
+    flat = g32.reshape(-1)
+    n = flat.shape[0]
+    k = max(1, int(round(n * frac)))
+    if k >= n:
+        return g32
+    vals, pos = lax.top_k(jnp.abs(flat), k)  # positions: the Index tensor
+    kept = jnp.zeros_like(flat).at[pos].set(flat[pos])
+    return kept.reshape(g32.shape)
+
+
+def _int8_centered(g32: jax.Array) -> jax.Array:
+    """Paper §3.2: mid-range centering + linear int8 bit-width reduction."""
+    lo = jnp.min(g32)
+    hi = jnp.max(g32)
+    center = (lo + hi) * 0.5
+    scale = jnp.maximum((hi - lo) / 254.0, 1e-12)
+    q = jnp.clip(jnp.round((g32 - center) / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale + center
+
+
+def compress_decompress(grads, state, kind: str, topk_frac: float = 0.01
+                        ) -> Tuple[Any, Dict[str, Any]]:
+    """Error-feedback compression round-trip on a gradient tree."""
+    res = state["residual"]
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        if g.ndim < 2:  # small leaves ride along uncompressed
+            return g32.astype(g.dtype), jnp.zeros_like(r)
+        if kind == "topk_index":
+            sent = _topk_project(g32, topk_frac)
+        elif kind == "int8_centered":
+            sent = _int8_centered(g32)
+        else:
+            raise ValueError(kind)
+        return sent.astype(g.dtype), g32 - sent
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree.leaves(res)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    sent = jax.tree_util.tree_unflatten(treedef, [s for s, _ in pairs])
+    new_res = jax.tree_util.tree_unflatten(treedef, [r for _, r in pairs])
+    return sent, {"residual": new_res}
+
+
+# ---------------------------------------------------------------------------
+# Explicit compressed DP all-reduce (shard_map body)
+# ---------------------------------------------------------------------------
+
+
+def allreduce_topk(g: jax.Array, axis: str, frac: float) -> jax.Array:
+    """Compressed all-reduce of one leaf inside shard_map: per-shard top-k
+    Index encoding -> all_gather (positions, values) -> scatter-add -> mean.
+
+    Wire cost per shard: 2·k words instead of n (k = frac·n), the paper's
+    Index representation as a collective payload.
+    """
+    flat = g.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    k = max(1, int(round(n * frac)))
+    if k >= n:
+        total = lax.psum(flat, axis)
+        return (total / lax.psum(1.0, axis)).reshape(g.shape).astype(g.dtype)
+    _, pos = lax.top_k(jnp.abs(flat), k)
+    vals = flat[pos]
+    all_pos = lax.all_gather(pos, axis)    # [shards, k] int32  (Index positions)
+    all_val = lax.all_gather(vals, axis)   # [shards, k] f32    (Index values)
+    dense = jnp.zeros((n,), jnp.float32).at[all_pos.reshape(-1)].add(
+        all_val.reshape(-1))
+    return (dense / lax.psum(1.0, axis)).reshape(g.shape).astype(g.dtype)
+
+
+def estimated_wire_bytes(params, kind: str, topk_frac: float) -> int:
+    """Bytes one DP all-reduce moves per shard under each scheme (for the
+    §Perf collective-term bookkeeping)."""
+    total = 0
+    for p in jax.tree.leaves(params):
+        n = p.size
+        if p.ndim < 2:
+            total += n * 4
+        elif kind == "topk_index":
+            k = max(1, int(round(n * topk_frac)))
+            total += k * 8  # int32 position + f32 value
+        elif kind == "int8_centered":
+            total += n * 1 + 8
+        else:
+            total += n * 4
+    return total

@@ -1,0 +1,198 @@
+"""Logical-axis sharding rules with divisibility fallback (DESIGN.md §6).
+
+MaxText-style: every parameter leaf gets a PartitionSpec derived from its
+pytree path + shape. A dim is sharded on an axis only if divisible by the
+axis size; otherwise the rule falls through (fallback chain), ending at
+replication. This is what absorbs the awkward assigned configs (15 heads,
+40 experts, 49155 vocab) without special-casing the model code.
+
+Stacked-layer leading dims (scan axes) are never sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+log = logging.getLogger(__name__)
+
+# How many leading dims of a leaf are layer-stack (scan) dims, by path regex.
+_STACK_DIMS = (
+    (re.compile(r"mamba_main"), 2),
+    (re.compile(r"mamba_tail|pairs|layers"), 1),
+)
+
+# Rule table: (path regex, [per-dim fallback chains]) applied to the
+# *unstacked* trailing shape. Each chain is a list of mesh-axis names tried
+# in order; None = replicate. Chains shorter than ndim pad with None.
+#
+# Scheme: TP over "model" (heads / d_ff / experts / vocab) + **FSDP over
+# "data"** (the d_model dim of every matrix). FSDP is what makes the
+# 235B-param qwen3 fit v5e HBM: params+opt shard over all 256 chips, and
+# GSPMD inserts the per-layer weight all-gathers (ZeRO-3 dataflow). An axis
+# is used at most once per leaf (``used`` set), so e.g. kv-heads take
+# "model" when divisible, else head_dim does.
+_RULES: List[Tuple[re.Pattern, List[List[Optional[str]]]]] = [
+    # embeddings / output heads: vocab over model, d_model over data (fsdp)
+    (re.compile(r"(^|/)embed$"), [["model"], ["data"]]),
+    (re.compile(r"lm_head$"), [["model"], ["data"]]),
+    (re.compile(r"lm_heads$"), [[None], ["model"], ["data"]]),
+    # attention: d_model -> fsdp; heads -> model (fallback head_dim)
+    (re.compile(r"attn/wq$"), [["data"], ["model"], ["model"]]),
+    (re.compile(r"attn/wk$"), [["data"], ["model"], ["model"]]),
+    (re.compile(r"attn/wv$"), [["data"], ["model"], ["model"]]),
+    (re.compile(r"attn/wo$"), [["model"], ["model"], ["data"]]),
+    (re.compile(r"attn/b[qkv]$"), [["model"], [None]]),
+    # dense MLP
+    (re.compile(r"mlp/w_(gate|up)$"), [["data"], ["model"]]),
+    (re.compile(r"mlp/w_down$"), [["model"], ["data"]]),
+    # MoE: EP on experts when divisible, fallback expert-TP on d_ff
+    (re.compile(r"moe/router$"), [["data"], [None]]),
+    (re.compile(r"moe/w_(gate|up)$"), [["model", None], ["data"], [None, "model"]]),
+    (re.compile(r"moe/w_down$"), [["model", None], [None, "model"], ["data"]]),
+    # Mamba2
+    (re.compile(r"mamba/in_proj$"), [["data"], ["model"]]),
+    (re.compile(r"mamba/conv_w$"), [[None], ["model"]]),
+    (re.compile(r"mamba/conv_b$"), [["model"]]),
+    (re.compile(r"mamba/out_proj$"), [["model"], ["data"]]),
+    # xLSTM
+    (re.compile(r"mlstm/(up_proj|wq|wk|wv|w_if)$"), [["data"], ["model"]]),
+    (re.compile(r"mlstm/down_proj$"), [["model"], ["data"]]),
+    (re.compile(r"slstm/w_[xh]$"), [["data"], ["model"]]),
+    (re.compile(r"slstm/w_up$"), [["data"], ["model"]]),
+    (re.compile(r"slstm/w_down$"), [["model"], ["data"]]),
+    (re.compile(r"img_proj$"), [["data"], ["model"]]),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _spec_for(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    n_stack = 0
+    for rx, k in _STACK_DIMS:
+        if rx.search(path):
+            n_stack = k
+            break
+    body = shape[n_stack:]
+    for rx, chains in _RULES:
+        if rx.search(path):
+            dims: List[Optional[str]] = []
+            used: set = set()
+            for d in range(len(body)):
+                chain = chains[d] if d < len(chains) else [None]
+                pick = None
+                for axis in chain:
+                    if axis is None:
+                        continue
+                    if (axis in mesh.axis_names and axis not in used
+                            and body[d] % _axis_size(mesh, axis) == 0):
+                        pick = axis
+                        used.add(axis)
+                        break
+                dims.append(pick)
+            if all(d is None for d in dims):
+                log.debug("replicated (no divisible dim): %s %s", path, shape)
+            return P(*([None] * n_stack + dims))
+    return P()  # norms, scalars, gates -> replicated
+
+
+def param_shardings(params_shape, mesh: Mesh):
+    """PartitionSpec pytree for a params (or shapes) pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [_spec_for(_path_str(path), tuple(leaf.shape), mesh)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named_shardings(params_shape, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_shardings(params_shape, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / cache shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh, batch_size: int, extra_dims: int = 1) -> P:
+    """Shard dim0 of batch inputs over the data axes (with divisibility
+    fallback to a prefix of the axes)."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    while axes and batch_size % _axis_size(mesh, tuple(axes)) != 0:
+        axes.pop(0)
+    lead = tuple(axes) if axes else None
+    return P(lead, *([None] * extra_dims))
+
+
+def batch_shardings(batch_specs_tree, mesh: Mesh, batch_size: int):
+    """Per-input PartitionSpecs: dim0 = batch over data axes, rest replicated."""
+    def spec(leaf):
+        return batch_spec(mesh, batch_size, extra_dims=len(leaf.shape) - 1)
+    return jax.tree.map(spec, batch_specs_tree)
+
+
+def cache_shardings(cache_shape_tree, mesh: Mesh, batch_size: int):
+    """KV-cache / SSM-state sharding for decode.
+
+    Layout conventions (models/model.py):
+      attention KV   [L, b, S, kv, hd]   -> b over data axes; kv over model
+                     (fallback: hd over model; fallback: S over model —
+                     split-KV "flash-decoding style" partitioning)
+      mamba ssm      [L(,g), b, h, n, p] -> b over data; h over model
+      mlstm C        [pairs, b, h, d, d] -> b over data; h else d over model
+      slstm vectors  [pairs, b, d]       -> b over data; d over model
+    """
+    data = [a for a in ("pod", "data") if a in mesh.axis_names]
+    while data and batch_size % _axis_size(mesh, tuple(data)) != 0:
+        data.pop(0)
+    dp = tuple(data) if data else None
+    msize = _axis_size(mesh, "model")
+
+    def spec(leaf):
+        shape = leaf.shape
+        # find the batch dim: first dim equal to batch_size after stack dims
+        dims: List[Optional[object]] = [None] * len(shape)
+        try:
+            b_idx = next(i for i, s in enumerate(shape) if s == batch_size and i <= 2)
+            if dp is not None:
+                dims[b_idx] = dp
+        except StopIteration:
+            b_idx = -1
+        # shard ONE trailing dim on model. For attention KV caches
+        # [..., b, S, kv, hd] prefer the SEQUENCE dim (flash-decoding
+        # stripes — each model shard owns a KV stripe and the softmax
+        # combines partial stats; kv/hd-sharded caches make GSPMD reshard
+        # the cache every step, killing donation), then kv heads, then hd.
+        ndim = len(shape)
+        if ndim >= 4 and b_idx >= 0 and b_idx == ndim - 4:
+            order = [ndim - 3, ndim - 2, ndim - 1]
+        else:
+            order = list(range(ndim - 1, b_idx, -1))
+        for d in order:
+            if d != b_idx and shape[d] % msize == 0 and shape[d] >= msize:
+                dims[d] = "model"
+                break
+        return P(*dims)
+
+    return jax.tree.map(spec, cache_shape_tree)

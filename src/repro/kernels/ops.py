@@ -1,0 +1,60 @@
+"""Jit'd public wrappers for the Pallas kernels with XLA fallbacks.
+
+On this CPU container the kernels run in interpret mode (``interpret=True``
+executes the kernel body in Python for correctness validation); on TPU they
+compile natively. ``use_pallas=False`` (the default for the XLA-fused query
+pipelines) routes to the pure-jnp reference implementations so the engine
+works on any backend — the kernels are the TPU hot-path option.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bucketize import (
+    MAX_VMEM_BOUNDARIES,
+    bucketize_count_kernel,
+    bucketize_kernel,
+)
+from repro.kernels.rle_decode import rle_decode_kernel
+from repro.kernels.segment_reduce import segment_sum_kernel
+
+MAX_MATMUL_SEGMENTS = 4096
+
+
+def default_interpret() -> bool:
+    """Pallas must interpret on non-TPU backends."""
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("right", "use_pallas", "interpret"))
+def bucketize(boundaries, queries, right: bool = True, use_pallas: bool = False,
+              interpret: bool | None = None):
+    if not use_pallas:
+        return ref.ref_bucketize(boundaries, queries, right)
+    interp = default_interpret() if interpret is None else interpret
+    if boundaries.shape[0] <= MAX_VMEM_BOUNDARIES:
+        return bucketize_kernel(boundaries, queries, right, interpret=interp)
+    return bucketize_count_kernel(boundaries, queries, right, interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("nrows", "fill", "use_pallas", "interpret"))
+def rle_decode(values, starts, ends, n, nrows: int, fill=0,
+               use_pallas: bool = False, interpret: bool | None = None):
+    if not use_pallas:
+        return ref.ref_rle_decode(values, starts, ends, n, nrows, fill)
+    interp = default_interpret() if interpret is None else interpret
+    return rle_decode_kernel(values, starts, ends, n, nrows, fill, interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("num_segments", "reduce", "use_pallas", "interpret"))
+def segment_reduce(values, segment_ids, num_segments: int, reduce: str = "sum",
+                   use_pallas: bool = False, interpret: bool | None = None):
+    if not use_pallas or reduce != "sum" or num_segments > MAX_MATMUL_SEGMENTS:
+        return ref.ref_segment_reduce(values, segment_ids, num_segments, reduce)
+    interp = default_interpret() if interpret is None else interpret
+    return segment_sum_kernel(values.astype(jnp.float32), segment_ids,
+                              num_segments, interpret=interp)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (correctness references).
+
+Each ``<name>`` kernel in this package must match its ``ref_<name>`` here
+bit-exactly for integer outputs / within tolerance for float reductions.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_bucketize(boundaries: jnp.ndarray, queries: jnp.ndarray, right: bool = True):
+    """torch.bucketize semantics (paper §2.2):
+    right=True  -> #\\{j : boundaries[j] <= q\\}  == searchsorted(side='right')
+    right=False -> #\\{j : boundaries[j] <  q\\}  == searchsorted(side='left')
+    """
+    return jnp.searchsorted(boundaries, queries, side="right" if right else "left").astype(jnp.int32)
+
+
+def ref_rle_decode(values: jnp.ndarray, starts: jnp.ndarray, ends: jnp.ndarray,
+                   n: jnp.ndarray, nrows: int, fill=0):
+    """Expand RLE runs to a dense [nrows] array; rows in gaps get ``fill``."""
+    rows = jnp.arange(nrows, dtype=jnp.int32)
+    run = jnp.searchsorted(ends, rows, side="left").astype(jnp.int32)
+    run = jnp.minimum(run, ends.shape[0] - 1)
+    covered = (rows >= starts[run]) & (rows <= ends[run]) & (run < n)
+    return jnp.where(covered, values[run], jnp.asarray(fill, values.dtype))
+
+
+def ref_segment_reduce(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                       num_segments: int, reduce: str = "sum"):
+    """Segment reduction by id (ids need NOT be sorted for the oracle)."""
+    if reduce == "sum":
+        return jnp.zeros((num_segments,), values.dtype).at[segment_ids].add(
+            values, mode="drop")
+    if reduce == "max":
+        init = jnp.full((num_segments,), -jnp.inf, values.dtype)
+        return init.at[segment_ids].max(values, mode="drop")
+    if reduce == "min":
+        init = jnp.full((num_segments,), jnp.inf, values.dtype)
+        return init.at[segment_ids].min(values, mode="drop")
+    raise ValueError(reduce)

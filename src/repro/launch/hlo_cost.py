@@ -1,0 +1,304 @@
+"""HLO-text cost model: FLOPs / bytes / collective traffic with while-loop
+trip-count multiplication.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` counts a ``while`` body
+ONCE — under scan-over-layers that under-counts a 94-layer model by ~94x.
+This module re-derives the three roofline inputs directly from
+``compiled.as_text()``:
+
+  * **flops**: ``dot`` ops exactly (2 · result_elems · K from the printed
+    contracting dims); elementwise/reduce ops approximately (1 flop/elem).
+    Fusion bodies are recursed into (flops live inside).
+  * **bytes**: counted at the *memory level* — operands + results of fusion /
+    dot / copy / reduce / ... ops in non-fusion computations (post-fusion HLO
+    means each fusion is one HBM round-trip, which is exactly XLA's own
+    accounting).
+  * **collectives**: operand bytes per all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute.
+
+Everything is multiplied by enclosing ``while`` trip counts (parsed from the
+loop-condition constants — lax.scan emits counted loops).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+_DT_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "and", "or", "xor", "not", "negate", "abs", "sign", "compare", "select",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "rsqrt", "sqrt", "cbrt", "sine", "cosine", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "clamp", "remainder", "atan2",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+}
+# memory-level ops: operands+result counted as HBM traffic when they appear
+# in a non-fused computation
+_MEMORY_OPS = _ELEMENTWISE | {
+    "fusion", "dot", "copy", "convert", "broadcast", "transpose", "reduce",
+    "reduce-window", "dynamic-slice", "dynamic-update-slice", "slice",
+    "concatenate", "gather", "scatter", "reverse", "pad", "select-and-scatter",
+    "sort", "iota", "reshape", "custom-call", "cholesky", "triangular-solve",
+} | set(COLLECTIVES)
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "call", "conditional", "after-all",
+               "partition-id", "replica-id", "copy-start", "copy-done",
+               "optimization-barrier"}
+
+
+def _shapes_of(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DT_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nelems(shape: Tuple[int, ...]) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def _bytes_of(shapes) -> int:
+    return sum(_nelems(s) * _DT_BYTES[dt] for dt, s in shapes)
+
+
+def split_computations(hlo: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
+    """name -> body lines; also returns the ENTRY computation name."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped and "=" not in stripped.split("(")[0]:
+            toks = stripped.split()
+            name = toks[0].lstrip("%")
+            if name == "ENTRY":
+                name = toks[1].lstrip("%")
+                name = name.split("(")[0]
+                entry = name
+            else:
+                name = name.split("(")[0]
+            comps[name] = []
+            cur = name
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+class _CompInfo:
+    __slots__ = ("flops", "bytes", "colls", "nested_while", "nested_flops",
+                 "nested_both")
+
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0
+        # list of (collective_type, operand_bytes, count=1)
+        self.colls: List[Tuple[str, float]] = []
+        self.nested_while: List[Tuple[str, str, int]] = []  # (body, cond, trip)
+        self.nested_flops: List[str] = []  # fusion bodies: flops only
+        self.nested_both: List[str] = []   # call/conditional: flops+bytes+colls
+
+
+def _analyze_comp(lines: List[str], comps: Dict[str, List[str]],
+                  in_fusion: bool, trip_dims=frozenset()) -> _CompInfo:
+    info = _CompInfo()
+    defs: Dict[str, List[Tuple[str, Tuple[int, ...]]]] = {}
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        opm = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+        op = opm.group(1) if opm else ""
+        # result type: everything before the opcode occurrence
+        type_part = rhs[:opm.start()] if opm else rhs
+        res_shapes = _shapes_of(type_part)
+        defs[name] = res_shapes
+        if not op:
+            continue
+
+        base = op[:-6] if op.endswith("-start") else op
+        args_part = rhs[opm.end() - 1:]
+        paren = args_part[:args_part.find(")") + 1] if ")" in args_part else args_part
+        operand_names = [a for a in re.findall(r"%?([\w.\-]+)", paren) if a in defs]
+
+        # ---- flops -------------------------------------------------------
+        if op == "dot":
+            lhs_shapes = defs.get(operand_names[0], []) if operand_names else []
+            k = 1
+            cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+            if cm and lhs_shapes:
+                dims = lhs_shapes[0][1]
+                for ci in cm.group(1).split(","):
+                    if ci:
+                        idx = int(ci)
+                        if idx < len(dims):
+                            k *= dims[idx]
+            info.flops += 2.0 * sum(_nelems(s) for _, s in res_shapes) * k
+        elif op in _ELEMENTWISE:
+            info.flops += sum(_nelems(s) for _, s in res_shapes)
+        elif op in ("reduce", "reduce-window", "select-and-scatter"):
+            if operand_names:
+                info.flops += sum(_nelems(s) for _, s in defs[operand_names[0]])
+        elif op == "convolution":
+            # not emitted by these models; approximate as result elems
+            info.flops += sum(_nelems(s) for _, s in res_shapes)
+
+        # ---- nesting -----------------------------------------------------
+        if op == "while":
+            bm = re.search(r"body=%?([\w.\-]+)", rhs)
+            cm2 = re.search(r"condition=%?([\w.\-]+)", rhs)
+            trip = 1
+            if cm2 and cm2.group(1) in comps:
+                consts = [int(c) for c in re.findall(
+                    r"constant\((\d+)\)", "\n".join(comps[cm2.group(1)]))]
+                if consts:
+                    trip = max(consts)
+            if bm:
+                info.nested_while.append((bm.group(1), cm2.group(1) if cm2 else "",
+                                          trip))
+            continue
+        if op == "fusion":
+            tm = re.search(r"calls=%?([\w.\-]+)", rhs)
+            if tm:
+                info.nested_flops.append(tm.group(1))
+        elif op in ("call", "conditional", "async-start"):
+            tm = re.search(r"(?:to_apply|calls|called_computations=\{)%?([\w.\-]+)",
+                           rhs)
+            if tm:
+                info.nested_both.append(tm.group(1))
+
+        # ---- bytes (memory level only outside fusions) ---------------------
+        if not in_fusion and base in _MEMORY_OPS and op != "while":
+            res_b = _bytes_of(res_shapes)
+            if op == "dynamic-update-slice":
+                # traffic = touched region only (XLA cost-analysis
+                # semantics): read+write of the update, not the full buffer
+                upd = (_bytes_of(defs[operand_names[1]])
+                       if len(operand_names) > 1 else res_b)
+                info.bytes += 2 * upd
+            elif op == "dynamic-slice":
+                info.bytes += 2 * res_b  # read slice + write result
+            elif op == "gather":
+                idx_b = (_bytes_of(defs[operand_names[-1]])
+                         if operand_names else 0)
+                info.bytes += 2 * res_b + idx_b
+            elif op == "scatter":
+                upd = (_bytes_of(defs[operand_names[-1]])
+                       if operand_names else res_b)
+                info.bytes += 2 * upd
+            else:
+                operand_b = 0
+                for a in set(operand_names):
+                    b_a = _bytes_of(defs[a])
+                    dims_a = defs[a][0][1] if defs[a] else ()
+                    # stacked scan inputs ([L, ...] weight/saved stacks) are
+                    # SLICED per iteration — post-fusion the dynamic-slice
+                    # hides inside the fusion, whose operand is the full
+                    # stack. Count one slice when the leading dim matches a
+                    # loop trip count (else a 94-layer model's weights get
+                    # billed 94x per step).
+                    if (dims_a and dims_a[0] in trip_dims and dims_a[0] > 1
+                            and b_a > res_b):
+                        b_a = b_a // dims_a[0]
+                    operand_b += b_a
+                info.bytes += operand_b + res_b
+
+        # ---- collectives ----------------------------------------------------
+        if base in COLLECTIVES and not op.endswith("-done"):
+            operand_b = sum(_bytes_of(defs[a]) for a in set(operand_names))
+            if operand_b == 0:
+                operand_b = _bytes_of(res_shapes)
+            info.colls.append((base, float(operand_b)))
+    return info
+
+
+def analyze(hlo: str) -> Dict[str, Any]:
+    comps, entry = split_computations(hlo)
+    fusion_names = set()
+    # fusion bodies referenced via calls= from fusion ops
+    for lines in comps.values():
+        for ln in lines:
+            if " fusion(" in ln or "fusion(" in ln:
+                tm = re.search(r"calls=%?([\w.\-]+)", ln)
+                if tm:
+                    fusion_names.add(tm.group(1))
+
+    # collect loop trip counts (for the stacked-operand slicing heuristic)
+    trip_dims = set()
+    for lines in comps.values():
+        for ln in lines:
+            if "while(" in ln:
+                cm = re.search(r"condition=%?([\w.\-]+)", ln)
+                if cm and cm.group(1) in comps:
+                    consts = [int(c) for c in re.findall(
+                        r"constant\((\d+)\)",
+                        "\n".join(comps[cm.group(1)]))]
+                    if consts:
+                        trip_dims.add(max(consts))
+
+    infos = {name: _analyze_comp(lines, comps,
+                                 in_fusion=(name in fusion_names),
+                                 trip_dims=frozenset(trip_dims))
+             for name, lines in comps.items()}
+
+    totals = {"flops": 0.0, "bytes": 0.0,
+              "collective_bytes_by_type": {c: 0.0 for c in COLLECTIVES},
+              "collective_count_by_type": {c: 0 for c in COLLECTIVES}}
+
+    def acc(name: str, mult: float, depth: int = 0, bytes_on: bool = True):
+        if name not in infos or depth > 24:
+            return
+        inf = infos[name]
+        totals["flops"] += mult * inf.flops
+        if bytes_on:
+            totals["bytes"] += mult * inf.bytes
+        for ctype, b in inf.colls:
+            totals["collective_bytes_by_type"][ctype] += mult * b
+            totals["collective_count_by_type"][ctype] += max(int(mult), 1)
+        for body, cond, trip in inf.nested_while:
+            acc(body, mult * trip, depth + 1, bytes_on)
+            if cond:
+                acc(cond, mult * trip, depth + 1, bytes_on)
+        for child in inf.nested_flops:
+            acc(child, mult, depth + 1, bytes_on=False)
+        for child in inf.nested_both:
+            acc(child, mult, depth + 1, bytes_on)
+
+    if entry is None:
+        # fall back: computation not referenced anywhere
+        referenced = set()
+        for inf in infos.values():
+            for b, c, _ in inf.nested_while:
+                referenced.update((b, c))
+            referenced.update(inf.nested_flops)
+            referenced.update(inf.nested_both)
+        entries = [n for n in comps if n not in referenced and n not in fusion_names]
+    else:
+        entries = [entry]
+    for e in entries:
+        acc(e, 1.0)
+
+    totals["collective_bytes_total"] = sum(
+        totals["collective_bytes_by_type"].values())
+    return totals

@@ -1,0 +1,34 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — required because the dry-run
+sets XLA_FLAGS before any jax initialization (see dryrun.py).
+
+Production topology (TPU v5e):
+  single-pod : (16, 16)      axes ("data", "model")   — 256 chips
+  multi-pod  : (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+Batch shards over ("pod", "data"); model-parallel dims over "model".
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke tests of the sharded code paths."""
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+
+
+def data_axes(mesh) -> tuple:
+    """The axes a global batch shards over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,18 @@
+"""Model zoo: the 10 assigned architectures (dense GQA / MoE / SSM / hybrid /
+audio / VLM backbones) as one unified, scan-over-layers JAX implementation.
+
+Public API:
+  ModelConfig            — architecture hyperparameters (configs/ builds these)
+  init_params            — parameter pytree (stacked layer params)
+  forward                — full-sequence forward (train / prefill)
+  loss_fn                — causal-LM loss (+ MoE aux losses)
+  init_cache, decode_step — single-token decode with KV / SSM state
+"""
+from repro.models.model import (
+    ModelConfig,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+)

@@ -1,0 +1,564 @@
+"""Unified model: one config covers all 10 assigned architectures.
+
+Families:
+  dense        — llama-style GQA transformer (smollm, chatglm3, yi, qwen2)
+  moe          — GQA attention + top-k MoE FFN (granite-moe, qwen3-moe)
+  hybrid_mamba — Mamba2 backbone + ONE shared attention block applied every
+                 ``attn_every`` layers, Zamba-style param sharing (zamba2)
+  xlstm        — alternating mLSTM / sLSTM blocks (xlstm)
+  audio        — dense backbone over precomputed EnCodec frame embeddings
+                 (STUB frontend) + ``n_codebooks`` output heads (musicgen)
+  vlm          — dense backbone over [patch-embeds ; token-embeds] (STUB
+                 anyres frontend) (llava-next)
+
+All layer stacks use lax.scan over stacked params: O(1) HLO in depth, which is
+what keeps the 94-layer qwen3-moe dry-run compile tractable (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import ssm as S
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid_mamba | xlstm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # hybrid (zamba2)
+    ssm_state: int = 0
+    attn_every: int = 6
+    mamba_head_dim: int = 64
+    # audio (musicgen)
+    n_codebooks: int = 0
+    # vlm (llava-next)
+    n_image_tokens: int = 0
+    # execution knobs (§Perf levers)
+    q_chunk: int = 0
+    ssd_chunk: int = 64
+    remat: str = "none"  # none | full | dots
+    vocab_pad_multiple: int = 16
+    # activation sharding (set by the launcher; None = no constraint).
+    # act_batch_axes: mesh axes for the batch dim, e.g. ("pod", "data").
+    # act_seq_axis: mesh axis for the seq dim of the residual stream
+    # ("model" = sequence-parallel residuals — divides per-device activation
+    # memory by the TP degree; the launcher only sets it when divisible).
+    act_batch_axes: Any = None
+    act_seq_axis: Any = None
+    # MoE dispatch-buffer sharding (launcher-set): expert dim (EP) or
+    # capacity dim (expert-TP fallback when n_experts doesn't divide)
+    moe_expert_axis: Any = None
+    moe_cap_axis: Any = None
+    # SSD/Mamba2 head-dim sharding (launcher-set when n_ssm_heads divides)
+    ssm_head_axis: Any = None
+    # context-parallel attention scores (launcher-set when heads don't
+    # divide the model axis): shard the score key-dim over this axis
+    score_seq_axis: Any = None
+    # vocab (logits) sharding axis: without it, seq-sharded activations
+    # leave the [b,l,V] logits and the f32 [V,D] head gradient UNSHARDED
+    # over the model axis (2.3 GiB/device at qwen3's 152k vocab)
+    vocab_axis: Any = None
+    # phantom-expert padding multiple (launcher sets to the model-axis size
+    # for EP; like vocab padding)
+    expert_pad_multiple: int = 1
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def padded_experts(self) -> int:
+        m = self.expert_pad_multiple
+        return -(-self.n_experts // m) * m
+
+    @property
+    def sub_quadratic(self) -> bool:
+        return self.family in ("hybrid_mamba", "xlstm")
+
+    @property
+    def takes_embeds(self) -> bool:
+        return self.family == "audio"
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _init_dense_layer(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.dtype),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.hd, cfg.qkv_bias, cfg.dtype),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.dtype),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def _init_moe_layer(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.dtype),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.hd, cfg.qkv_bias, cfg.dtype),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.dtype),
+        "moe": L.init_moe(k2, cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.dtype,
+                          n_padded=cfg.padded_experts),
+    }
+
+
+def _init_mamba_layer(cfg: ModelConfig, key):
+    return {
+        "ln": L.init_rmsnorm(cfg.d_model, cfg.dtype),
+        "mamba": S.init_mamba2(key, cfg.d_model, cfg.ssm_state,
+                               cfg.mamba_head_dim, dtype=cfg.dtype),
+    }
+
+
+def _init_xlstm_pair(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln_m": L.init_rmsnorm(cfg.d_model, cfg.dtype),
+        "mlstm": S.init_mlstm(k1, cfg.d_model, cfg.n_heads, dtype=cfg.dtype),
+        "ln_s": L.init_rmsnorm(cfg.d_model, cfg.dtype),
+        "slstm": S.init_slstm(k2, cfg.d_model, cfg.n_heads, dtype=cfg.dtype),
+    }
+
+
+def _stack_init(init_fn, cfg, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(cfg, k))(keys)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    V = cfg.padded_vocab
+    s = 1.0 / math.sqrt(cfg.d_model)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (V, cfg.d_model), jnp.float32) * s
+                  ).astype(cfg.dtype),
+        "ln_f": L.init_rmsnorm(cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        if cfg.family == "audio":
+            params["lm_heads"] = (jax.random.normal(
+                keys[1], (cfg.n_codebooks, V, cfg.d_model), jnp.float32) * s
+            ).astype(cfg.dtype)
+        else:
+            params["lm_head"] = (jax.random.normal(
+                keys[1], (V, cfg.d_model), jnp.float32) * s).astype(cfg.dtype)
+
+    if cfg.family in ("dense", "audio", "vlm"):
+        params["layers"] = _stack_init(_init_dense_layer, cfg, keys[2], cfg.n_layers)
+    elif cfg.family == "moe":
+        params["layers"] = _stack_init(_init_moe_layer, cfg, keys[2], cfg.n_layers)
+    elif cfg.family == "hybrid_mamba":
+        n_groups = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers - n_groups * cfg.attn_every
+        main = _stack_init(_init_mamba_layer, cfg, keys[2], n_groups * cfg.attn_every)
+        params["mamba_main"] = jax.tree.map(
+            lambda x: x.reshape((n_groups, cfg.attn_every) + x.shape[1:]), main)
+        if tail:
+            params["mamba_tail"] = _stack_init(_init_mamba_layer, cfg, keys[3], tail)
+        params["shared_attn"] = _init_dense_layer(cfg, keys[4])  # one shared block
+    elif cfg.family == "xlstm":
+        params["pairs"] = _stack_init(_init_xlstm_pair, cfg, keys[2], cfg.n_layers // 2)
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.family == "vlm":
+        params["img_proj"] = (jax.random.normal(
+            keys[5], (cfg.d_model, cfg.d_model), jnp.float32) * s).astype(cfg.dtype)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def active_param_count(cfg: ModelConfig, params) -> int:
+    """Active params per token (MoE: top_k of n_experts expert params)."""
+    total = param_count(params)
+    if cfg.family != "moe" or not cfg.n_experts:
+        return total
+    expert_leaves = ("w_gate", "w_up", "w_down")
+    expert = sum(int(x.size) for path, x in
+                 jax.tree_util.tree_flatten_with_path(params)[0]
+                 if any(getattr(p, "key", None) in expert_leaves for p in path)
+                 and any(getattr(p, "key", None) == "moe" for p in path))
+    return total - expert + int(expert * cfg.top_k / cfg.n_experts)
+
+
+# ---------------------------------------------------------------------------
+# Blocks (with remat policy)
+# ---------------------------------------------------------------------------
+
+
+def _shard_act(x, cfg: ModelConfig):
+    """Constrain the residual-stream sharding (requires an active mesh
+    context; the launcher sets the axis fields, smoke tests leave them None)."""
+    if cfg.act_batch_axes is None and cfg.act_seq_axis is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(cfg.act_batch_axes, cfg.act_seq_axis, *([None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def _score_shard(cfg: ModelConfig):
+    if cfg.score_seq_axis is None:
+        return None
+    return (cfg.act_batch_axes, cfg.score_seq_axis)
+
+
+def _dense_block(cfg: ModelConfig, lp, x, positions):
+    h = x + L.causal_attention(lp["attn"], rmsn(lp["ln1"], x), positions,
+                               cfg.rope_theta, cfg.q_chunk,
+                               score_shard=_score_shard(cfg))
+    return h + L.mlp(lp["mlp"], rmsn(lp["ln2"], h))
+
+
+def _moe_block(cfg: ModelConfig, lp, x, positions):
+    h = x + L.causal_attention(lp["attn"], rmsn(lp["ln1"], x), positions,
+                               cfg.rope_theta, cfg.q_chunk,
+                               score_shard=_score_shard(cfg))
+    y, aux = L.moe(lp["moe"], rmsn(lp["ln2"], h), cfg.top_k,
+                   cfg.capacity_factor, group_axes=cfg.act_batch_axes,
+                   expert_axis=cfg.moe_expert_axis, cap_axis=cfg.moe_cap_axis)
+    return h + y, aux
+
+
+def _mamba_block(cfg: ModelConfig, lp, x):
+    return x + S.mamba2(lp["mamba"], rmsn(lp["ln"], x), cfg.ssd_chunk,
+                        batch_axes=cfg.act_batch_axes,
+                        head_axis=cfg.ssm_head_axis)
+
+
+def _xlstm_pair_block(cfg: ModelConfig, lp, x):
+    h = x + S.mlstm(lp["mlstm"], rmsn(lp["ln_m"], x))
+    return h + S.slstm(lp["slstm"], rmsn(lp["ln_s"], h))
+
+
+rmsn = L.rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """Token/frame/patch embedding per family. Returns (x [b,l,d], positions [l])."""
+    if cfg.family == "audio":
+        x = batch["embeds"].astype(cfg.dtype)  # STUB frontend output
+    elif cfg.family == "vlm":
+        tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+        img = jnp.einsum("bld,de->ble", batch["patch_embeds"].astype(cfg.dtype),
+                         params["img_proj"])
+        x = jnp.concatenate([img, tok], axis=1)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    l = x.shape[1]
+    return x, jnp.arange(l, dtype=jnp.int32)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            last_only: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits, aux_loss).
+
+    ``last_only=True`` is the serving-prefill form: logits are computed for
+    the final position only — the [b, S, V] logit tensor (the largest
+    activation at 32k prefill) is never materialized."""
+    x, positions = embed_inputs(params, cfg, batch)
+    x = _shard_act(x, cfg)
+    aux_total = jnp.asarray(0.0, jnp.float32)
+
+    if cfg.family in ("dense", "audio", "vlm"):
+        block = _maybe_remat(
+            lambda carry, lp: (_shard_act(_dense_block(cfg, lp, carry, positions),
+                                          cfg), None), cfg)
+        x, _ = lax.scan(block, x, params["layers"])
+    elif cfg.family == "moe":
+        def moe_scan(carry, lp):
+            y, aux = _moe_block(cfg, lp, carry, positions)
+            return _shard_act(y, cfg), aux
+        block = _maybe_remat(moe_scan, cfg)
+        x, auxs = lax.scan(block, x, params["layers"])
+        aux_total = jnp.sum(auxs)
+    elif cfg.family == "hybrid_mamba":
+        shared = params["shared_attn"]
+
+        def group_body(carry, group_params):
+            def inner(c, lp):
+                return _mamba_block(cfg, lp, c), None
+            h, _ = lax.scan(inner, carry, group_params)
+            h = _dense_block(cfg, shared, h, positions)  # shared attn + MLP
+            return _shard_act(h, cfg), None
+
+        x, _ = lax.scan(_maybe_remat(group_body, cfg), x, params["mamba_main"])
+        if "mamba_tail" in params:
+            def inner(c, lp):
+                return _mamba_block(cfg, lp, c), None
+            x, _ = lax.scan(inner, x, params["mamba_tail"])
+    elif cfg.family == "xlstm":
+        block = _maybe_remat(
+            lambda carry, lp: (_shard_act(_xlstm_pair_block(cfg, lp, carry),
+                                          cfg), None), cfg)
+        x, _ = lax.scan(block, x, params["pairs"])
+    else:
+        raise ValueError(cfg.family)
+
+    if last_only:
+        x = x[:, -1:, :]
+    x = rmsn(params["ln_f"], x)
+    if cfg.family == "audio":
+        heads = params["lm_heads"]  # [cb, V, d]
+        logits = jnp.einsum("bld,cvd->blcv", x, heads)
+        if cfg.vocab_axis is not None:
+            from jax.sharding import PartitionSpec as P
+            logits = jax.lax.with_sharding_constraint(
+                logits, P(cfg.act_batch_axes, None, None, cfg.vocab_axis))
+    else:
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bld,vd->blv", x, head)
+        if cfg.vocab_axis is not None:
+            from jax.sharding import PartitionSpec as P
+            logits = jax.lax.with_sharding_constraint(
+                logits, P(cfg.act_batch_axes, None, cfg.vocab_axis))
+    return logits, aux_total
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """Causal-LM loss (next-token). Padded-vocab logits are masked."""
+    logits, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(logits.shape[-1]) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e9, logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if cfg.family == "vlm":  # loss only on text positions (after image prefix)
+        nll = nll[:, cfg.n_image_tokens:]
+    loss = jnp.mean(nll) + 0.01 * aux
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, key=None) -> Dict[str, Any]:
+    """KV / SSM state buffers for single-token decode."""
+    kv_shape = (batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        return {
+            "k": jnp.zeros((cfg.n_layers,) + kv_shape, cfg.dtype),
+            "v": jnp.zeros((cfg.n_layers,) + kv_shape, cfg.dtype),
+        }
+    if cfg.family == "hybrid_mamba":
+        key = key if key is not None else jax.random.PRNGKey(0)
+        proto = S.init_mamba2(key, cfg.d_model, cfg.ssm_state, cfg.mamba_head_dim,
+                              dtype=cfg.dtype)
+        st = S.mamba2_init_state(proto, batch)
+        n_groups = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers - n_groups * cfg.attn_every
+        cache = {
+            "ssm_main": jax.tree.map(
+                lambda x: jnp.zeros((n_groups, cfg.attn_every) + x.shape, x.dtype), st),
+            "shared_k": jnp.zeros((n_groups,) + kv_shape, cfg.dtype),
+            "shared_v": jnp.zeros((n_groups,) + kv_shape, cfg.dtype),
+        }
+        if tail:
+            cache["ssm_tail"] = jax.tree.map(
+                lambda x: jnp.zeros((tail,) + x.shape, x.dtype), st)
+        return cache
+    if cfg.family == "xlstm":
+        n_pairs = cfg.n_layers // 2
+        d_inner = int(cfg.d_model * 2)
+        hd = d_inner // cfg.n_heads
+        return {
+            "mlstm": {
+                "C": jnp.zeros((n_pairs, batch, cfg.n_heads, hd, hd), jnp.float32),
+                "nvec": jnp.zeros((n_pairs, batch, cfg.n_heads, hd), jnp.float32),
+                "m": jnp.full((n_pairs, batch, cfg.n_heads), -1e30, jnp.float32),
+            },
+            "slstm": {
+                "c": jnp.zeros((n_pairs, batch, cfg.d_model), jnp.float32),
+                "nvec": jnp.zeros((n_pairs, batch, cfg.d_model), jnp.float32),
+                "h": jnp.zeros((n_pairs, batch, cfg.d_model), jnp.float32),
+                "m": jnp.full((n_pairs, batch, cfg.d_model), -1e30, jnp.float32),
+            },
+        }
+    raise ValueError(cfg.family)
+
+
+def _update_layer(stack, i, new):
+    """In-place write of layer i's slice into a stacked cache buffer."""
+    return lax.dynamic_update_slice(
+        stack, new[None].astype(stack.dtype),
+        (i,) + (0,) * new.ndim)
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch: Dict[str, jax.Array], pos):
+    """One-token decode. batch: {"tokens": [b,1]} (or embeds for audio).
+    Returns (logits [b,1,V], new_cache).
+
+    Caches are lax.scan CARRIES updated in place per layer
+    (dynamic_update_slice at the layer index): scan ``ys`` stacking would
+    allocate a second full cache buffer and break input->output aliasing —
+    at 32k x 128 seqs that is the difference between the cache living once
+    or three times in HBM.
+    """
+    if cfg.family == "audio":
+        x = batch["embeds"].astype(cfg.dtype)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def body(carry, xs):
+            h, ck_all, cv_all = carry
+            lp, i = xs
+            a, nk, nv = L.attention_decode(lp["attn"], rmsn(lp["ln1"], h),
+                                           ck_all[i], cv_all[i], pos,
+                                           cfg.rope_theta)
+            h = h + a
+            if cfg.family == "moe":
+                y, _ = L.moe(lp["moe"], rmsn(lp["ln2"], h), cfg.top_k,
+                             cfg.capacity_factor,
+                             group_axes=cfg.act_batch_axes,
+                             expert_axis=cfg.moe_expert_axis,
+                             cap_axis=cfg.moe_cap_axis)
+            else:
+                y = L.mlp(lp["mlp"], rmsn(lp["ln2"], h))
+            ck_all = _update_layer(ck_all, i, nk)
+            cv_all = _update_layer(cv_all, i, nv)
+            return (h + y, ck_all, cv_all), None
+
+        idx = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+        (x, nk, nv), _ = lax.scan(body, (x, cache["k"], cache["v"]),
+                                  (params["layers"], idx))
+        new_cache = {"k": nk, "v": nv}
+    elif cfg.family == "hybrid_mamba":
+        shared = params["shared_attn"]
+        n_groups = params["mamba_main"]["ln"]["scale"].shape[0]
+        per = params["mamba_main"]["ln"]["scale"].shape[1]
+
+        def group_body(carry, xs):
+            h, ssm_all, ck_all, cv_all = carry
+            gp, gi = xs
+
+            def inner(c, ys):
+                hh, st_all = c
+                lp, li = ys
+                st = jax.tree.map(lambda t: t[gi, li], ssm_all)
+                y, st2 = S.mamba2_decode(lp["mamba"], rmsn(lp["ln"], hh), st)
+                st_all = jax.tree.map(
+                    lambda all_, new: lax.dynamic_update_slice(
+                        all_, new[None, None].astype(all_.dtype),
+                        (gi, li) + (0,) * new.ndim),
+                    st_all, st2)
+                return (hh + y, st_all), None
+
+            li = jnp.arange(per, dtype=jnp.int32)
+            (h, ssm_all), _ = lax.scan(inner, (h, ssm_all), (gp, li))
+            a, nk, nv = L.attention_decode(shared["attn"], rmsn(shared["ln1"], h),
+                                           ck_all[gi], cv_all[gi], pos,
+                                           cfg.rope_theta)
+            h = h + a
+            h = h + L.mlp(shared["mlp"], rmsn(shared["ln2"], h))
+            ck_all = _update_layer(ck_all, gi, nk)
+            cv_all = _update_layer(cv_all, gi, nv)
+            return (h, ssm_all, ck_all, cv_all), None
+
+        gi = jnp.arange(n_groups, dtype=jnp.int32)
+        (x, st_main, nk, nv), _ = lax.scan(
+            group_body, (x, cache["ssm_main"], cache["shared_k"],
+                         cache["shared_v"]),
+            (params["mamba_main"], gi))
+        new_cache = {"ssm_main": st_main, "shared_k": nk, "shared_v": nv}
+        if "mamba_tail" in params:
+            n_tail = params["mamba_tail"]["ln"]["scale"].shape[0]
+
+            def tail_body(carry, ys):
+                hh, st_all = carry
+                lp, li = ys
+                st = jax.tree.map(lambda t: t[li], st_all)
+                y, st2 = S.mamba2_decode(lp["mamba"], rmsn(lp["ln"], hh), st)
+                st_all = jax.tree.map(
+                    lambda all_, new: _update_layer(all_, li, new),
+                    st_all, st2)
+                return (hh + y, st_all), None
+
+            li = jnp.arange(n_tail, dtype=jnp.int32)
+            (x, st_tail), _ = lax.scan(tail_body, (x, cache["ssm_tail"]),
+                                       (params["mamba_tail"], li))
+            new_cache["ssm_tail"] = st_tail
+    elif cfg.family == "xlstm":
+        def body(carry, xs):
+            h, m_all, s_all = carry
+            lp, i = xs
+            mst = jax.tree.map(lambda t: t[i], m_all)
+            y, mst2 = S.mlstm_decode(lp["mlstm"], rmsn(lp["ln_m"], h), mst)
+            h = h + y
+            sst = jax.tree.map(lambda t: t[i], s_all)
+            y, sst2 = S.slstm_decode(lp["slstm"], rmsn(lp["ln_s"], h), sst)
+            m_all = jax.tree.map(lambda a, nw: _update_layer(a, i, nw),
+                                 m_all, mst2)
+            s_all = jax.tree.map(lambda a, nw: _update_layer(a, i, nw),
+                                 s_all, sst2)
+            return (h + y, m_all, s_all), None
+
+        idx = jnp.arange(params["pairs"]["ln_m"]["scale"].shape[0], dtype=jnp.int32)
+        (x, mst, sst), _ = lax.scan(body, (x, cache["mlstm"], cache["slstm"]),
+                                    (params["pairs"], idx))
+        new_cache = {"mlstm": mst, "slstm": sst}
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsn(params["ln_f"], x)
+    if cfg.family == "audio":
+        logits = jnp.einsum("bld,cvd->blcv", x, params["lm_heads"])
+    else:
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bld,vd->blv", x, head)
+    return logits, new_cache

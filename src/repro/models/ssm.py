@@ -1,0 +1,364 @@
+"""SSM / recurrent blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+Mamba2 follows the SSD ("state space duality") chunked-parallel algorithm
+(Dao & Gu, arXiv:2405.21060, minimal discrete form): intra-chunk quadratic
+attention-like term + inter-chunk linear state recurrence. Training is
+chunk-parallel; decode is the O(1)-state recurrent form — which is what makes
+``long_500k`` decode feasible for the hybrid/SSM architectures.
+
+xLSTM (arXiv:2405.04517): mLSTM has a matrix memory with exponential gating —
+parallel (quadratic) form for train/prefill, recurrent form for decode;
+sLSTM is a strict per-step recurrence (lax.scan over time).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import _norm_init, init_rmsnorm, rmsnorm
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, d_model: int, d_state: int, head_dim: int = 64,
+                expand: int = 2, conv_width: int = 4, dtype=jnp.bfloat16):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    n_groups = 1  # B/C shared across heads within a group (GVA-style)
+    keys = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d_model)
+    conv_ch = d_inner + 2 * n_groups * d_state
+    return {
+        "in_proj": _norm_init(keys[0], (d_model, 2 * d_inner + 2 * n_groups * d_state + n_heads), s, dtype),
+        "conv_w": _norm_init(keys[1], (conv_width, conv_ch), 1.0 / math.sqrt(conv_width), dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": init_rmsnorm(d_inner, dtype),
+        "out_proj": _norm_init(keys[2], (d_inner, d_model), 1.0 / math.sqrt(d_inner), dtype),
+    }
+
+
+def _mamba2_dims(params):
+    d_model, proj = params["in_proj"].shape
+    n_heads = params["A_log"].shape[0]
+    conv_ch = params["conv_b"].shape[0]
+    # proj = 2*d_inner + 2*g*d_state + n_heads ; conv_ch = d_inner + 2*g*d_state
+    d_inner = proj - conv_ch - n_heads
+    gd_state = (conv_ch - d_inner) // 2
+    head_dim = d_inner // n_heads
+    return d_inner, gd_state, n_heads, head_dim
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Minimal SSD (Mamba2 alg.): x:[b,l,h,p], dt:[b,l,h], A:[h],
+    B,C:[b,l,n]. Returns y:[b,l,h,p]."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    nc = l // chunk
+    # discretize
+    dA = dt * A[None, None, :]  # [b,l,h] (negative)
+    xb = (x * dt[..., None]).reshape(b, nc, chunk, h, p)
+    dA = dA.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    cum = jnp.cumsum(dA, axis=2)  # [b,nc,c,h]
+    # intra-chunk: L[t,s] = exp(cum[t]-cum[s]) for s<=t
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [b,nc,t,s,h]
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))[None, None, :, :, None]
+    # mask BEFORE exp: in the s>t region diff >= 0 and exp can overflow to inf,
+    # which turns into 0*inf = NaN in the backward pass of where(); in the
+    # kept region diff <= 0 (cumsum of negative dA), so exp never overflows.
+    Lmat = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+    scores = jnp.einsum("bctn,bcsn->bcts", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+    y_diag = jnp.einsum("bcts,bctsh,bcshp->bcthp", scores, Lmat,
+                        xb.astype(jnp.float32))
+
+    # chunk states: S_c = Σ_s exp(cum[last]-cum[s]) B_s x_s
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)  # [b,nc,c,h]
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchnp", Bc.astype(jnp.float32),
+                        decay_states, xb.astype(jnp.float32))
+
+    # inter-chunk recurrence over nc chunks: S[c] = states[c] + dec[c]*S[c-1]
+    # — an affine linear recurrence, computed with associative_scan so the
+    # nc dim stays shardable (a sequential lax.scan over a sharded axis
+    # forces GSPMD to replicate; associative_scan is log-depth and local)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [b,nc,h]
+
+    def combine(a, b_):
+        d1, s1 = a
+        d2, s2 = b_
+        return d1 * d2, s2 + d2[:, :, :, None, None] * s1
+
+    dec_in = chunk_decay  # [b,nc,h]
+    incl_dec, incl_state = lax.associative_scan(
+        combine, (dec_in, states), axis=1)
+    final_state = incl_state[:, -1]
+    # state entering chunk c = inclusive scan up to c-1 (shift right by one)
+    prev_states = jnp.pad(incl_state[:, :-1],
+                          ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+
+    # inter-chunk output: y_off[t] = C_t · (exp(cum[t]) * prev_state)
+    decay_out = jnp.exp(cum)  # [b,nc,c,h]
+    y_off = jnp.einsum("bctn,bcth,bchnp->bcthp", Cc.astype(jnp.float32),
+                       decay_out, prev_states)
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final_state
+
+
+def mamba2(params, x, chunk: int = 64, batch_axes=None, head_axis=None):
+    """Mamba2 block forward (train/prefill). x: [b,l,d]. Returns [b,l,d].
+
+    ``head_axis`` shards the SSD head dim of dt/x (and therefore every
+    [b,nc,c,c,h] intra-chunk tensor) over the model axis — without it the
+    chunked-SSD intermediates replicate and dominate train memory."""
+    b, l, d = x.shape
+    d_inner, d_state, n_heads, head_dim = _mamba2_dims(params)
+    proj = jnp.einsum("bld,dp->blp", x, params["in_proj"])
+    z, xc, B, C, dt_pre = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + d_state,
+               2 * d_inner + 2 * d_state], axis=-1)
+    # causal depthwise conv over (x, B, C)
+    xbc = jnp.concatenate([xc, B, C], axis=-1)
+    w = params["conv_w"]
+    cw = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (cw - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + l, :] * w[i][None, None, :] for i in range(cw))
+    xbc = jax.nn.silu(conv + params["conv_b"])
+    xc, B, C = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + params["dt_bias"])  # [b,l,h]
+    A = -jnp.exp(params["A_log"])  # [h] negative
+    xh = xc.reshape(b, l, n_heads, head_dim)
+    if head_axis is not None:
+        from jax.sharding import PartitionSpec as P
+        dt = jax.lax.with_sharding_constraint(dt, P(batch_axes, None, head_axis))
+        xh = jax.lax.with_sharding_constraint(
+            xh, P(batch_axes, None, head_axis, None))
+    pad_len = (-l) % chunk
+    if pad_len:
+        xh = jnp.pad(xh, ((0, 0), (0, pad_len), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad_len), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad_len), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad_len), (0, 0)))
+    y, _ = _ssd_chunked(xh, dt, A, B, C, chunk)
+    y = y[:, :l]
+    y = y + xc.reshape(b, l, n_heads, head_dim).astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(b, l, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(z)
+    return jnp.einsum("bli,id->bld", y, params["out_proj"])
+
+
+def mamba2_init_state(params, batch: int):
+    d_inner, d_state, n_heads, head_dim = _mamba2_dims(params)
+    cw = params["conv_w"].shape[0]
+    conv_ch = params["conv_b"].shape[0]
+    return {
+        "ssm": jnp.zeros((batch, n_heads, d_state, head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cw - 1, conv_ch), jnp.bfloat16),
+    }
+
+
+def mamba2_decode(params, x, state):
+    """Single-token recurrent step. x: [b,1,d]. Returns (y [b,1,d], state)."""
+    b = x.shape[0]
+    d_inner, d_state, n_heads, head_dim = _mamba2_dims(params)
+    proj = jnp.einsum("bld,dp->blp", x, params["in_proj"])[:, 0]
+    z, xc, B, C, dt_pre = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + d_state,
+               2 * d_inner + 2 * d_state], axis=-1)
+    xbc = jnp.concatenate([xc, B, C], axis=-1)  # [b, conv_ch]
+    window = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # [b,cw,ch]
+    w = params["conv_w"]
+    conv = jnp.einsum("bcw,cw->bw", window.astype(jnp.float32),
+                      w.astype(jnp.float32))
+    xbc_c = jax.nn.silu(conv + params["conv_b"].astype(jnp.float32))
+    xc, B, C = jnp.split(xbc_c, [d_inner, d_inner + d_state], axis=-1)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + params["dt_bias"])  # [b,h]
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A[None, :])  # [b,h]
+    xh = xc.reshape(b, n_heads, head_dim)
+    dBx = jnp.einsum("bn,bhp->bhnp", B, xh * dt[..., None])
+    ssm = state["ssm"] * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", C, ssm)
+    y = y + xh * params["D"][None, :, None]
+    y = y.reshape(b, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(z)
+    out = jnp.einsum("bi,id->bd", y, params["out_proj"])[:, None, :]
+    new_state = {"ssm": ssm, "conv": window[:, 1:, :].astype(state["conv"].dtype)}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory) — parallel form for train, recurrent for decode
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, d_model: int, n_heads: int, proj_factor: float = 2.0,
+               dtype=jnp.bfloat16):
+    d_inner = int(d_model * proj_factor)
+    head_dim = d_inner // n_heads
+    keys = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d_model)
+    si = 1.0 / math.sqrt(d_inner)
+    return {
+        "up_proj": _norm_init(keys[0], (d_model, 2 * d_inner), s, dtype),
+        "wq": _norm_init(keys[1], (d_inner, d_inner), si, dtype),
+        "wk": _norm_init(keys[2], (d_inner, d_inner), si, dtype),
+        "wv": _norm_init(keys[3], (d_inner, d_inner), si, dtype),
+        "w_if": _norm_init(keys[4], (d_inner, 2 * n_heads), si, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((n_heads,)),
+                                 jnp.full((n_heads,), 3.0)]).astype(jnp.float32),
+        "norm": init_rmsnorm(d_inner, dtype),
+        "down_proj": _norm_init(keys[5], (d_inner, d_model), si, dtype),
+    }
+
+
+def mlstm(params, x):
+    """Parallel (quadratic) mLSTM forward. x: [b,l,d] -> [b,l,d]."""
+    b, l, d = x.shape
+    n_heads = params["b_if"].shape[0] // 2
+    up = jnp.einsum("bld,di->bli", x, params["up_proj"])
+    h_in, z = jnp.split(up, 2, axis=-1)
+    d_inner = h_in.shape[-1]
+    head_dim = d_inner // n_heads
+    q = jnp.einsum("bli,ij->blj", h_in, params["wq"]).reshape(b, l, n_heads, head_dim)
+    k = jnp.einsum("bli,ij->blj", h_in, params["wk"]).reshape(b, l, n_heads, head_dim)
+    v = jnp.einsum("bli,ij->blj", h_in, params["wv"]).reshape(b, l, n_heads, head_dim)
+    gates = jnp.einsum("bli,ig->blg", h_in.astype(jnp.float32), params["w_if"]) + params["b_if"]
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)  # [b,l,h]
+    log_f = -jax.nn.softplus(-f_pre)  # log sigmoid(f)
+    F = jnp.cumsum(log_f, axis=1)  # [b,l,h]
+    # D[t,s] = F[t] - F[s] + i[s], s <= t
+    Dm = F[:, :, None, :] - F[:, None, :, :] + i_pre[:, None, :, :]
+    tri = jnp.tril(jnp.ones((l, l), jnp.bool_))
+    Dm = jnp.where(tri[None, :, :, None], Dm, -jnp.inf)
+    m = jnp.max(Dm, axis=2, keepdims=True)  # stabilizer [b,l,1,h]
+    Dexp = jnp.exp(Dm - m)
+    scores = jnp.einsum("blhk,bshk->blsh", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(head_dim)
+    S = scores * Dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(S, axis=2, keepdims=True)),
+                       jnp.exp(-m))  # [b,l,1,h]
+    y = jnp.einsum("blsh,bshk->blhk", S / norm, v.astype(jnp.float32))
+    y = y.reshape(b, l, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(z)
+    return jnp.einsum("bli,id->bld", y, params["down_proj"])
+
+
+def mlstm_init_state(params, batch: int, d_model: int):
+    n_heads = params["b_if"].shape[0] // 2
+    d_inner = params["down_proj"].shape[0]
+    head_dim = d_inner // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+        "nvec": jnp.zeros((batch, n_heads, head_dim), jnp.float32),
+        "m": jnp.full((batch, n_heads), -jnp.inf, jnp.float32),
+    }
+
+
+def mlstm_decode(params, x, state):
+    """Recurrent mLSTM step (stabilized). x: [b,1,d]."""
+    b = x.shape[0]
+    n_heads = params["b_if"].shape[0] // 2
+    up = jnp.einsum("bld,di->bli", x, params["up_proj"])[:, 0]
+    h_in, z = jnp.split(up, 2, axis=-1)
+    d_inner = h_in.shape[-1]
+    head_dim = d_inner // n_heads
+    q = (h_in @ params["wq"]).reshape(b, n_heads, head_dim).astype(jnp.float32)
+    k = (h_in @ params["wk"]).reshape(b, n_heads, head_dim).astype(jnp.float32)
+    v = (h_in @ params["wv"]).reshape(b, n_heads, head_dim).astype(jnp.float32)
+    gates = h_in.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)  # [b,h]
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    f_sc = jnp.exp(log_f + state["m"] - m_new)
+    i_sc = jnp.exp(i_pre - m_new)
+    C = state["C"] * f_sc[:, :, None, None] + \
+        i_sc[:, :, None, None] * jnp.einsum("bhk,bhv->bhkv", k / math.sqrt(head_dim), v)
+    nvec = state["nvec"] * f_sc[:, :, None] + i_sc[:, :, None] * k / math.sqrt(head_dim)
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, nvec)),
+                      jnp.exp(-m_new))
+    y = (num / den[:, :, None]).reshape(b, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(z)
+    out = jnp.einsum("bi,id->bd", y, params["down_proj"])[:, None, :]
+    return out, {"C": C, "nvec": nvec, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, strict recurrence)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d_model: int, n_heads: int, dtype=jnp.bfloat16):
+    keys = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        # fused input->gates projection: z, i, f, o
+        "w_x": _norm_init(keys[0], (d_model, 4 * d_model), s, dtype),
+        "w_h": _norm_init(keys[1], (d_model, 4 * d_model), s, dtype),
+        "b": jnp.zeros((4 * d_model,), jnp.float32).at[2 * d_model:3 * d_model].set(1.0),
+        "norm": init_rmsnorm(d_model, dtype),
+        # post-block gated MLP (xLSTM pf=4/3)
+        "w_up": _norm_init(keys[2], (d_model, 2 * (4 * d_model // 3)), s, dtype),
+        "w_down": _norm_init(keys[3], (4 * d_model // 3, d_model),
+                             1.0 / math.sqrt(4 * d_model // 3), dtype),
+    }
+
+
+def slstm_init_state(params, batch: int, d_model: int):
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return {"c": z, "nvec": z, "h": z, "m": jnp.full((batch, d_model), -jnp.inf)}
+
+
+def _slstm_cell(params, state, xw):
+    """One sLSTM step with exponential-gate stabilization. xw: [b, 4d]."""
+    d = state["h"].shape[-1]
+    pre = xw + state["h"].astype(xw.dtype) @ params["w_h"].astype(xw.dtype)
+    pre = pre.astype(jnp.float32) + params["b"]
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+    log_f = -jax.nn.softplus(-ft)  # sigmoid forget in log space
+    m_new = jnp.maximum(log_f + state["m"], it)
+    f_sc = jnp.exp(log_f + state["m"] - m_new)
+    i_sc = jnp.exp(it - m_new)
+    c = f_sc * state["c"] + i_sc * jnp.tanh(zt)
+    nvec = f_sc * state["nvec"] + i_sc
+    h = jax.nn.sigmoid(ot) * c / jnp.maximum(nvec, 1e-6)
+    return {"c": c, "nvec": nvec, "h": h, "m": m_new}
+
+
+def slstm(params, x):
+    """sLSTM over a sequence via lax.scan. x: [b,l,d] -> [b,l,d]."""
+    b, l, d = x.shape
+    xw = jnp.einsum("bld,dg->blg", x, params["w_x"])  # [b,l,4d]
+    state = slstm_init_state(params, b, d)
+
+    def step(st, xw_t):
+        st2 = _slstm_cell(params, st, xw_t)
+        return st2, st2["h"]
+
+    _, hs = lax.scan(step, state, jnp.moveaxis(xw, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # [b,l,d]
+    y = rmsnorm(params["norm"], y)
+    u, g = jnp.split(jnp.einsum("bld,di->bli", y, params["w_up"]), 2, axis=-1)
+    return jnp.einsum("bli,id->bld", u * jax.nn.silu(g), params["w_down"])
+
+
+def slstm_decode(params, x, state):
+    xw = jnp.einsum("bld,dg->blg", x, params["w_x"])[:, 0]
+    st2 = _slstm_cell(params, state, xw)
+    y = st2["h"][:, None, :].astype(x.dtype)
+    y = rmsnorm(params["norm"], y)
+    u, g = jnp.split(jnp.einsum("bld,di->bli", y, params["w_up"]), 2, axis=-1)
+    out = jnp.einsum("bli,id->bld", u * jax.nn.silu(g), params["w_down"])
+    return out, st2

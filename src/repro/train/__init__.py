@@ -1,0 +1,4 @@
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, lr_at
+from repro.train.step import TrainConfig, TrainState, make_train_step, make_eval_step
+from repro.train.checkpoint import CheckpointManager
+from repro.train.loop import TrainLoop, LoopConfig

@@ -1,0 +1,92 @@
+"""AdamW with decoupled weight decay, global-norm clipping and a
+warmup+cosine schedule — pure JAX (no optax dependency in this container).
+
+Moments are fp32 regardless of param dtype; the update is computed in fp32
+and cast back to the param dtype (bf16 params + fp32 moments — the standard
+mixed-precision recipe; see DESIGN.md §9 for the master-copy trade-off).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_frac·lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def adamw_init(params, state_dtype=jnp.float32) -> Dict[str, Any]:
+    """``state_dtype=bf16`` halves optimizer HBM (the Gopher/Chinchilla
+    recipe) — used for the 235B config where f32 moments alone are 7.3
+    GiB/device; moment math still runs in f32 (cast per step)."""
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                        for x in jax.tree.leaves(tree)))
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay applies to matrices only; the ndim>=2 gate below already
+    excludes norms/biases/gates, so no name-based rules are needed."""
+    del path
+    return True
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, opt_state, step: jax.Array
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = lr_at(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+
+    new_p, new_mu, new_nu = [], [], []
+    for (path, p), g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        st_dtype = mu.dtype
+        g32 = g.astype(jnp.float32) * scale
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g32
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        upd = (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(path) and p.ndim >= 2:
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_mu.append(mu32.astype(st_dtype))
+        new_nu.append(nu32.astype(st_dtype))
+
+    unflat = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return unflat(new_p), {"mu": unflat(new_mu), "nu": unflat(new_nu)}, metrics

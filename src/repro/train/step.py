@@ -1,0 +1,106 @@
+"""Jittable train / eval steps.
+
+``make_train_step`` builds the full step: microbatch gradient accumulation
+(``lax.scan`` — bounds activation memory AND pipelines grads), optional
+gradient compression (the paper's encodings applied to DP collectives,
+distributed/compression.py), AdamW update. One jitted program per config —
+the same "whole pipeline in one program" rule the engine uses (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import model as M
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: opt.AdamWConfig = opt.AdamWConfig()
+    grad_accum: int = 1  # microbatches per step (batch dim must divide)
+    grad_compression: str = "none"  # none | topk_index | int8_centered
+    topk_frac: float = 0.01  # fraction of entries kept by topk_index
+    opt_state_dtype: Any = jnp.float32  # bf16 halves optimizer HBM
+    accum_dtype: Any = jnp.float32  # microbatch grad accumulator dtype
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+    comp_state: Any = None  # error-feedback residuals (grad compression)
+
+
+def init_train_state(cfg: M.ModelConfig, tcfg: TrainConfig, key) -> TrainState:
+    params = M.init_params(cfg, key)
+    state = TrainState(params=params,
+                       opt_state=opt.adamw_init(params, tcfg.opt_state_dtype),
+                       step=jnp.zeros((), jnp.int32))
+    if tcfg.grad_compression != "none":
+        from repro.distributed import compression as comp
+        state.comp_state = comp.init_state(params)
+    return state
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], k: int):
+    """[B, ...] -> [k, B/k, ...] per leaf."""
+    def sp(x):
+        b = x.shape[0]
+        return x.reshape((k, b // k) + x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(cfg: M.ModelConfig, tcfg: TrainConfig
+                    ) -> Callable[[TrainState, Dict[str, jax.Array]],
+                                  Tuple[TrainState, Dict[str, jax.Array]]]:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    grad_fn = jax.value_and_grad(lambda p, b: M.loss_fn(p, cfg, b))
+
+    def accumulate(params, batch):
+        if tcfg.grad_accum <= 1:
+            return grad_fn(params, batch)
+        mb = _split_microbatches(batch, tcfg.grad_accum)
+
+        def body(carry, microbatch):
+            loss_acc, g_acc = carry
+            loss, g = grad_fn(params, microbatch)
+            g_acc = jax.tree.map(lambda a, x: a + x.astype(a.dtype), g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, tcfg.accum_dtype), params)
+        (loss_sum, g_sum), _ = lax.scan(body, (jnp.zeros((), jnp.float32), zeros), mb)
+        inv = 1.0 / tcfg.grad_accum
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        loss, grads = accumulate(state.params, batch)
+
+        comp_state = state.comp_state
+        if tcfg.grad_compression != "none":
+            from repro.distributed import compression as comp
+            grads, comp_state = comp.compress_decompress(
+                grads, comp_state, kind=tcfg.grad_compression,
+                topk_frac=tcfg.topk_frac)
+
+        params, opt_state, om = opt.adamw_update(
+            tcfg.adamw, state.params, grads, state.opt_state, state.step)
+        metrics = {"loss": loss, **om, "step": state.step}
+        return TrainState(params=params, opt_state=opt_state,
+                          step=state.step + 1, comp_state=comp_state), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: M.ModelConfig):
+    def eval_step(params, batch):
+        return M.loss_fn(params, cfg, batch)
+    return eval_step

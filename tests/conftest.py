@@ -1,0 +1,80 @@
+"""Shared test helpers.
+
+NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
+(DESIGN.md: only launch/dryrun.py forces 512 host devices). Multi-device
+tests spawn subprocesses that set the flag themselves.
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+# ---- host-side reference encoders (oracles build from dense arrays) --------
+
+
+def dense_to_rle_mask_np(d):
+    """Dense bool -> (starts, ends) run lists."""
+    n = len(d)
+    starts, ends = [], []
+    i = 0
+    while i < n:
+        if d[i]:
+            j = i
+            while j + 1 < n and d[j + 1]:
+                j += 1
+            starts.append(i)
+            ends.append(j)
+            i = j + 1
+        else:
+            i += 1
+    return np.array(starts, np.int32), np.array(ends, np.int32)
+
+
+def dense_to_rle_col_np(vals):
+    """Dense values -> full-coverage (values, starts, ends)."""
+    n = len(vals)
+    starts, ends, v = [], [], []
+    i = 0
+    while i < n:
+        j = i
+        while j + 1 < n and vals[j + 1] == vals[i]:
+            j += 1
+        starts.append(i)
+        ends.append(j)
+        v.append(vals[i])
+        i = j + 1
+    return (np.array(v), np.array(starts, np.int32), np.array(ends, np.int32))
+
+
+def make_rle_mask(d, slack=4):
+    from repro.core import encodings as E
+    s, e = dense_to_rle_mask_np(d)
+    return E.make_rle_mask(s, e, len(d), capacity=max(len(s), 1) + slack)
+
+
+def make_index_mask(d, slack=4):
+    from repro.core import encodings as E
+    pos = np.nonzero(d)[0].astype(np.int32)
+    return E.make_index_mask(pos, len(d), capacity=max(len(pos), 1) + slack)
+
+
+def make_plain_mask(d):
+    from repro.core import encodings as E
+    return E.make_plain_mask(d)
+
+
+def make_rle_col(vals, slack=4):
+    from repro.core import encodings as E
+    v, s, e = dense_to_rle_col_np(vals)
+    return E.make_rle(v, s, e, len(vals), capacity=len(v) + slack)
+
+
+MASK_ENCODERS = {
+    "plain": make_plain_mask,
+    "rle": make_rle_mask,
+    "index": make_index_mask,
+}

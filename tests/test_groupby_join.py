@@ -1,0 +1,134 @@
+"""Group-by aggregation (§7) and joins (§8) vs brute-force oracles."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encodings as E
+from repro.core import groupby as G
+from repro.core import join as J
+
+from conftest import MASK_ENCODERS, make_rle_col
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _gb_oracle(keys, vals, sel=None):
+    sel = np.ones(len(keys), bool) if sel is None else sel
+    uk = np.unique(keys[sel])
+    return uk, {
+        "sum": np.array([vals[sel & (keys == u)].sum() for u in uk]),
+        "count": np.array([(sel & (keys == u)).sum() for u in uk]),
+        "min": np.array([vals[sel & (keys == u)].min() for u in uk]),
+        "max": np.array([vals[sel & (keys == u)].max() for u in uk]),
+    }
+
+
+@given(data=st.data())
+def test_groupby_rle_key_plain_val(data):
+    n = data.draw(st.integers(10, 80))
+    keys = np.sort(np.array(data.draw(
+        st.lists(st.integers(0, 4), min_size=n, max_size=n)), np.int32))
+    vals = np.array(data.draw(
+        st.lists(st.integers(0, 9), min_size=n, max_size=n)), np.float32)
+    res = G.groupby_aggregate(
+        {"k": make_rle_col(keys), "v": E.make_plain(vals)}, ["k"],
+        [("s", "sum", "v"), ("c", "count", None),
+         ("mn", "min", "v"), ("mx", "max", "v")], num_groups_cap=8)
+    uk, want = _gb_oracle(keys, vals)
+    ng = int(res.num_groups)
+    assert ng == len(uk)
+    order = np.argsort(np.asarray(res.keys["k"])[:ng])
+    np.testing.assert_array_equal(np.asarray(res.keys["k"])[:ng][order], uk)
+    np.testing.assert_allclose(np.asarray(res.aggs["s"])[:ng][order],
+                               want["sum"], rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(res.aggs["c"])[:ng][order],
+                                  want["count"])
+    np.testing.assert_allclose(np.asarray(res.aggs["mn"])[:ng][order],
+                               want["min"])
+    np.testing.assert_allclose(np.asarray(res.aggs["mx"])[:ng][order],
+                               want["max"])
+
+
+@pytest.mark.parametrize("menc", ["rle", "index"])
+@given(data=st.data())
+def test_groupby_with_mask(menc, data):
+    """App. D rule 4: the filter folds into alignment for RLE group-bys."""
+    n = data.draw(st.integers(10, 60))
+    keys = np.sort(np.array(data.draw(
+        st.lists(st.integers(0, 3), min_size=n, max_size=n)), np.int32))
+    vals = np.arange(n, dtype=np.float32)
+    sel = np.array(data.draw(st.lists(st.booleans(), min_size=n, max_size=n)))
+    if not sel.any():
+        return
+    res = G.groupby_aggregate(
+        {"k": make_rle_col(keys), "v": make_rle_col(vals)}, ["k"],
+        [("s", "sum", "v"), ("c", "count", None)], num_groups_cap=8,
+        mask=MASK_ENCODERS[menc](sel))
+    uk, want = _gb_oracle(keys, vals, sel)
+    ng = int(res.num_groups)
+    assert ng == len(uk)
+    order = np.argsort(np.asarray(res.keys["k"])[:ng])
+    np.testing.assert_allclose(np.asarray(res.aggs["s"])[:ng][order],
+                               want["sum"], rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(res.aggs["c"])[:ng][order],
+                                  want["count"])
+
+
+@given(data=st.data())
+def test_groupby_rle_sum_never_expands(data):
+    """§7.2 v·l rewrite: segments stay at run granularity when all inputs
+    are position-explicit (alignment yields O(runs) segments, not O(rows))."""
+    keys = np.sort(np.array(data.draw(
+        st.lists(st.integers(0, 2), min_size=20, max_size=60)), np.int32))
+    kc = make_rle_col(keys)
+    view = G.align_columns({"k": kc})
+    assert view.lengths.shape[0] <= kc.capacity  # run-level, not row-level
+
+
+@given(data=st.data())
+def test_join_rle_plain(data):
+    nl = data.draw(st.integers(4, 25))
+    nr = data.draw(st.integers(4, 25))
+    lk = np.sort(np.array(data.draw(
+        st.lists(st.integers(0, 5), min_size=nl, max_size=nl)), np.int32))
+    rk = np.sort(np.array(data.draw(
+        st.lists(st.integers(0, 5), min_size=nr, max_size=nr)), np.int32))
+    cap = nl * nr + 4
+    ji = J.join_index(make_rle_col(lk), E.make_plain(rk), cap_pairs=cap)
+    lr, rr, valid, total = J.expand_pairs_to_rows(ji, cap_rows=cap)
+    got = sorted(zip(np.asarray(lr)[np.asarray(valid)].tolist(),
+                     np.asarray(rr)[np.asarray(valid)].tolist()))
+    want = sorted((i, j) for i in range(nl) for j in range(nr)
+                  if lk[i] == rk[j])
+    assert got == want
+    assert int(total) == len(want)
+
+
+@given(data=st.data())
+def test_join_gather_rows_payload(data):
+    """§8.2 apply-join-index on an RLE payload: fetch per run, never expand."""
+    n = data.draw(st.integers(6, 40))
+    payload = np.sort(np.array(data.draw(
+        st.lists(st.integers(1, 5), min_size=n, max_size=n)), np.int32))
+    col = make_rle_col(payload)
+    rows = np.array(data.draw(st.lists(st.integers(0, n - 1), min_size=1,
+                                       max_size=30)), np.int32)
+    got = J.gather_rows(col, jnp.asarray(rows),
+                        jnp.ones((len(rows),), jnp.bool_))
+    np.testing.assert_array_equal(np.asarray(got), payload[rows])
+
+
+@given(data=st.data())
+def test_semi_join(data):
+    n = data.draw(st.integers(6, 60))
+    keys = np.sort(np.array(data.draw(
+        st.lists(st.integers(0, 9), min_size=n, max_size=n)), np.int32))
+    dim = np.unique(np.array(data.draw(
+        st.lists(st.integers(0, 9), min_size=1, max_size=5)), np.int32))
+    for col in (make_rle_col(keys), E.make_plain(keys)):
+        m = J.semi_join_mask(col, jnp.asarray(dim),
+                             jnp.asarray(len(dim), jnp.int32))
+        np.testing.assert_array_equal(np.asarray(E.decode_mask(m)),
+                                      np.isin(keys, dim))

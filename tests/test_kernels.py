@@ -1,0 +1,78 @@
+"""Pallas kernels: shape/dtype sweeps in interpret mode vs ref.py oracles."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("nb,nq", [(1, 8), (7, 100), (128, 1024),
+                                   (1023, 512), (5000, 2048), (200_000, 4096)])
+@pytest.mark.parametrize("right", [True, False])
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_bucketize_sweep(rng, nb, nq, right, dtype):
+    b = np.sort(rng.integers(0, 10 * nb, nb)).astype(dtype)
+    q = rng.integers(-5, 10 * nb + 5, nq).astype(dtype)
+    got = ops.bucketize(jnp.asarray(b), jnp.asarray(q), right=right,
+                        use_pallas=True, interpret=True)
+    want = ref.ref_bucketize(jnp.asarray(b), jnp.asarray(q), right)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("nb", [int(3e6)])
+def test_bucketize_big_boundaries_variant(rng, nb):
+    """Boundaries beyond VMEM route to the 2-D-grid count kernel."""
+    b = np.sort(rng.integers(0, 10 * nb, nb)).astype(np.int32)
+    q = rng.integers(0, 10 * nb, 1024).astype(np.int32)
+    got = ops.bucketize(jnp.asarray(b), jnp.asarray(q), right=True,
+                        use_pallas=True, interpret=True)
+    want = ref.ref_bucketize(jnp.asarray(b), jnp.asarray(q), True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n_runs,nrows", [(1, 16), (5, 100), (300, 5000),
+                                          (1000, 65536)])
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_rle_decode_sweep(rng, n_runs, nrows, dtype):
+    starts = np.sort(rng.choice(nrows, n_runs, replace=False)).astype(np.int32)
+    ends = np.concatenate([starts[1:] - 1, [nrows - 1]]).astype(np.int32)
+    vals = rng.integers(1, 100, n_runs).astype(dtype)
+    args = (jnp.asarray(vals), jnp.asarray(starts), jnp.asarray(ends),
+            jnp.asarray(n_runs, jnp.int32), nrows)
+    got = ops.rle_decode(*args, use_pallas=True, interpret=True)
+    want = ref.ref_rle_decode(*args)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rle_decode_with_gaps(rng):
+    nrows = 1000
+    starts = np.array([10, 200, 550], np.int32)
+    ends = np.array([99, 300, 899], np.int32)
+    vals = np.array([7, 8, 9], np.int32)
+    args = (jnp.asarray(vals), jnp.asarray(starts), jnp.asarray(ends),
+            jnp.asarray(3, jnp.int32), nrows)
+    got = ops.rle_decode(*args, use_pallas=True, interpret=True)
+    want = ref.ref_rle_decode(*args)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,s", [(64, 4), (5000, 128), (20000, 1000),
+                                 (100_000, 4096)])
+def test_segment_reduce_sweep(rng, n, s):
+    v = rng.random(n).astype(np.float32)
+    ids = rng.integers(0, s, n).astype(np.int32)
+    got = ops.segment_reduce(jnp.asarray(v), jnp.asarray(ids), s,
+                             use_pallas=True, interpret=True)
+    want = ref.ref_segment_reduce(jnp.asarray(v), jnp.asarray(ids), s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("reduce", ["max", "min"])
+def test_segment_reduce_minmax_fallback(rng, reduce):
+    v = rng.random(512).astype(np.float32)
+    ids = rng.integers(0, 16, 512).astype(np.int32)
+    got = ops.segment_reduce(jnp.asarray(v), jnp.asarray(ids), 16,
+                             reduce=reduce, use_pallas=True, interpret=True)
+    want = ref.ref_segment_reduce(jnp.asarray(v), jnp.asarray(ids), 16, reduce)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)

