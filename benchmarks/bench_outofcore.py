@@ -1,0 +1,86 @@
+"""Out-of-core partitioned execution sweep (DESIGN.md §4, paper §1/§9).
+
+The paper's headline scenario: query data whose UNCOMPRESSED working set does
+not fit the device. We configure a per-partition resident budget far below
+the uncompressed table size, ingest into partitions sized to that budget (and
+then sweep explicit partition counts), and stream Q1/Q6-analogue pipelines
+partition by partition. Reported per sweep point:
+
+  * peak per-partition device footprint (encoded) vs the budget,
+  * partitions skipped by zone maps,
+  * wall time and jit trace count (capacity bucketing keeps it O(log range)).
+
+    PYTHONPATH=src python -m benchmarks.bench_outofcore
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import compress
+from repro.core.partition import PartitionedQuery, PartitionedTable, rows_for_budget
+from repro.core.table import Table
+from benchmarks.bench_tpch import SORT_ORDERS, make_lineitem, q1, q6
+from benchmarks.common import time_fn, write_csv
+
+BUDGET_MIB = 8.0  # per-partition uncompressed resident budget
+
+
+def run(n=2_000_000):
+    rng = np.random.default_rng(7)
+    cfg = compress.CompressionConfig(plain_threshold=1_000)
+    budget = int(BUDGET_MIB * 2**20)
+
+    rows = []
+    for qname, qfn in [("Q1", q1), ("Q6", q6)]:
+        data = make_lineitem(rng, n, order=SORT_ORDERS[qname])
+        uncompressed = sum(v.nbytes for v in data.values())
+        assert uncompressed > budget, (
+            "bench misconfigured: working set must exceed the budget")
+
+        # budget-derived sizing, then coarser explicit sweeps
+        budget_rows = rows_for_budget(data, budget)
+        sweep = [("budget", None, budget_rows)] + [
+            (str(k), k, None) for k in (4, 8, 16, 32)]
+        for label, num_parts, part_rows in sweep:
+            pt = PartitionedTable.from_arrays(
+                data, cfg=cfg, num_partitions=num_parts,
+                partition_rows=part_rows)
+            q = qfn(pt)
+            ms = time_fn(lambda: q.run(), warmup=1, iters=3) * 1e3
+            per_part_unc = uncompressed / max(
+                sum(1 for p in pt.partitions if p.rows), 1)
+            rows.append({
+                "query": qname, "sweep": label,
+                "partitions": q.last_stats["partitions"],
+                "skipped": q.last_stats["skipped"],
+                "traces": q.trace_count,
+                "ms": ms,
+                "uncompressed_MiB": uncompressed / 2**20,
+                "budget_MiB": BUDGET_MIB,
+                "peak_part_MiB": pt.max_partition_nbytes() / 2**20,
+                "per_part_unc_MiB": per_part_unc / 2**20,
+            })
+            if label == "budget":
+                assert per_part_unc <= budget * 1.01, (
+                    "budget sizing failed to bound the per-partition "
+                    "uncompressed working set")
+
+        # sanity: partitioned == resident single-table execution
+        t = Table.from_arrays(data, cfg=cfg)
+        single, parted = qfn(t).run(), qfn(
+            PartitionedTable.from_arrays(data, cfg=cfg, num_partitions=8)).run()
+        if qname == "Q6":
+            rel = abs(float(single["revenue"]) - float(parted["revenue"]))
+            assert rel / max(abs(float(single["revenue"])), 1) < 1e-3
+        else:
+            assert int(single.num_groups) == parted.num_groups
+
+    print(f"[bench_outofcore] uncompressed working set "
+          f"{rows[0]['uncompressed_MiB']:.0f} MiB vs {BUDGET_MIB:.0f} MiB "
+          "per-partition budget (DESIGN.md §4)")
+    write_csv("outofcore.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -12,9 +12,17 @@ import numpy as np
 import jax
 
 from repro.core import arithmetic, compress
+from repro.core.partition import PartitionedQuery, PartitionedTable
 from repro.core.plan import Query, col, pk_fk_gather
 from repro.core.table import Table
 from benchmarks.common import time_fn, write_csv
+
+
+def make_query(t):
+    """Stage the right executor for ``t``: the query pipelines below are
+    shared between resident (Table) and out-of-core (PartitionedTable)
+    benchmarks/tests."""
+    return PartitionedQuery(t) if isinstance(t, PartitionedTable) else Query(t)
 
 
 # paper Table 7: query-specific multi-column sort orders
@@ -44,8 +52,8 @@ def make_lineitem(rng, n, order=None):
     return cols
 
 
-def q1(t: Table):
-    return (Query(t)
+def q1(t):
+    return (make_query(t)
             .filter(col("shipdate") <= 2400)
             .groupby(["returnflag", "linestatus"],
                      {"sum_qty": ("sum", "quantity"),
@@ -54,8 +62,8 @@ def q1(t: Table):
                       "cnt": ("count", None)}, num_groups_cap=16))
 
 
-def q6(t: Table):
-    return (Query(t)
+def q6(t):
+    return (make_query(t)
             .filter(col("shipdate").between(500, 864)
                     & col("discount").between(5, 7) & (col("quantity") < 24))
             .map("rev", lambda env: arithmetic.binary_op(
@@ -63,15 +71,15 @@ def q6(t: Table):
             .aggregate({"revenue": ("sum", "rev")}))
 
 
-def q17(t: Table, part_keys):
-    return (Query(t)
+def q17(t, part_keys):
+    return (make_query(t)
             .semi_join("partkey", part_keys)
             .filter(col("quantity") < 10)
             .aggregate({"sum_price": ("sum", "price"), "c": ("count", None)}))
 
 
-def q19(t: Table, part_keys):
-    return (Query(t)
+def q19(t, part_keys):
+    return (make_query(t)
             .semi_join("partkey", part_keys)
             .filter(col("quantity").between(5, 30)
                     & (col("shipdate") > 100))

@@ -20,8 +20,9 @@ def main(argv=None):
 
     from benchmarks import (bench_and_design, bench_bi,
                             bench_compression_quality, bench_memory,
-                            bench_primitives, bench_production,
-                            bench_roofline, bench_skew, bench_tpch)
+                            bench_outofcore, bench_primitives,
+                            bench_production, bench_roofline, bench_skew,
+                            bench_tpch)
 
     benches = {
         "primitives": lambda: bench_primitives.run(
@@ -29,6 +30,7 @@ def main(argv=None):
             (10_000, 100_000, 1_000_000, 4_000_000)),
         "and_design": lambda: bench_and_design.run(n=500_000 if q else 2_000_000),
         "tpch": lambda: bench_tpch.run(n=500_000 if q else 2_000_000),
+        "outofcore": lambda: bench_outofcore.run(n=500_000 if q else 2_000_000),
         "compression_quality": lambda: bench_compression_quality.run(
             n=500_000 if q else 2_000_000),
         "production": lambda: bench_production.run(n=800_000 if q else 3_000_000),

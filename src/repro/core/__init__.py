@@ -10,8 +10,18 @@ Layers:
   join        — sort-merge join / semi-join on encoded columns (§8, TPU-adapted)
   compress    — §9 encoding-selection heuristics (host-side ingest)
   table, plan — Table container + jitted query pipelines (App. D rules)
+  partition   — partitioned out-of-core execution: zone maps + partial merge
 """
-from repro.core import arithmetic, compress, groupby, join, logical, plan, primitives
+from repro.core import (
+    arithmetic,
+    compress,
+    groupby,
+    join,
+    logical,
+    partition,
+    plan,
+    primitives,
+)
 from repro.core.encodings import (
     IndexColumn,
     IndexMask,
@@ -31,5 +41,6 @@ from repro.core.encodings import (
     make_rle,
     make_rle_mask,
 )
+from repro.core.partition import PartitionedQuery, PartitionedTable
 from repro.core.plan import Query, col
 from repro.core.table import Table

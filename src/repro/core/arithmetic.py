@@ -29,6 +29,7 @@ from repro.core.encodings import (
     coverage,
     decode_column,
     decode_mask,
+    offset_is_zero,
     valid_slots,
 )
 
@@ -98,7 +99,8 @@ def compare(col, op, literal):
         # the bit-width-reduction trick keeps predicates narrow too), then
         # patch outlier positions.
         base_mask = f(col.base.values.astype(jnp.int64) + col.base.offset, literal) \
-            if jnp.issubdtype(col.base.values.dtype, jnp.integer) and col.base.offset != 0 \
+            if jnp.issubdtype(col.base.values.dtype, jnp.integer) \
+            and not offset_is_zero(col.base.offset) \
             else f(col.base.values, literal)
         out_mask = f(col.outliers.values, literal)
         vals = base_mask.at[col.outliers.positions].set(out_mask, mode="drop")

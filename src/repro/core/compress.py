@@ -38,6 +38,41 @@ class CompressionConfig:
     outlier_frac: float = 0.05  # Plain+Index: trim top/bottom 5%
     capacity_slack: float = 1.0  # headroom multiplier on encoded capacities
     force: Optional[str] = None  # force an encoding (tests/benchmarks)
+    # Round run/index capacities up to the next power of two (DESIGN.md §4):
+    # ragged partitions then share a handful of jit cache entries instead of
+    # compiling one program per partition.
+    capacity_bucket: Optional[str] = None  # None | "pow2"
+    min_bucket: int = 8  # floor for bucketed capacities
+
+
+def next_pow2(k: int, minimum: int = 1) -> int:
+    """Smallest power of two >= max(k, minimum)."""
+    return 1 << (max(int(k), minimum, 1) - 1).bit_length()
+
+
+def _capacity(k: int, cfg: CompressionConfig) -> int:
+    """Buffer capacity for k valid run/index entries under ``cfg``."""
+    cap = max(int(k * cfg.capacity_slack), k, 1)
+    if cfg.capacity_bucket == "pow2":
+        cap = next_pow2(cap, cfg.min_bucket)
+    return cap
+
+
+def column_minmax(values: np.ndarray) -> Tuple[float, float]:
+    """Host-side zone-map entry (min, max) for a column slice.
+
+    Empty slices get an empty interval (lo > hi) so every range check fails
+    and the partition is skipped. A slice containing NaN gets the unbounded
+    interval: NaN would poison min/max (every interval test false = "proof"
+    of no match), and NaN rows still satisfy ``ne`` predicates on-device, so
+    such a partition must never be pruned.
+    """
+    values = np.asarray(values)
+    if values.size == 0:
+        return (1.0, 0.0)
+    if values.dtype.kind == "f" and np.isnan(values).any():
+        return (-np.inf, np.inf)
+    return (float(values.min()), float(values.max()))
 
 
 @dataclasses.dataclass
@@ -145,11 +180,12 @@ def encode(values: np.ndarray, cfg: CompressionConfig = CompressionConfig(),
         np.not_equal(values[1:], values[:-1], out=change[1:])
         starts = np.flatnonzero(change)
         ends = np.concatenate([starts[1:] - 1, [n - 1]])
-        cap = max(int(len(starts) * cfg.capacity_slack), len(starts))
-        return make_rle(values[starts], starts, ends, nrows=n, capacity=cap)
+        return make_rle(values[starts], starts, ends, nrows=n,
+                        capacity=_capacity(len(starts), cfg))
 
     if enc == "index":
-        return make_index(values, np.arange(n), nrows=n)
+        return make_index(values, np.arange(n), nrows=n,
+                          capacity=_capacity(n, cfg))
 
     if enc == "rle_index":
         change = np.empty(n, dtype=bool)
@@ -159,13 +195,14 @@ def encode(values: np.ndarray, cfg: CompressionConfig = CompressionConfig(),
         ends = np.concatenate([starts[1:] - 1, [n - 1]])
         lengths = ends - starts + 1
         long = lengths >= cfg.min_run
-        rle = make_rle(values[starts[long]], starts[long], ends[long], nrows=n)
+        rle = make_rle(values[starts[long]], starts[long], ends[long], nrows=n,
+                       capacity=_capacity(int(long.sum()), cfg))
         short_starts, short_lens = starts[~long], lengths[~long]
         pos = np.concatenate(
             [np.arange(s, s + l) for s, l in zip(short_starts, short_lens)]
         ) if len(short_starts) else np.zeros((0,), np.int64)
         idx = make_index(values[pos] if len(pos) else np.zeros((0,), values.dtype),
-                         pos, nrows=n)
+                         pos, nrows=n, capacity=_capacity(len(pos), cfg))
         return RLEIndexColumn(rle=rle, idx=idx, nrows=n)
 
     if enc == "plain_index":
@@ -178,7 +215,8 @@ def encode(values: np.ndarray, cfg: CompressionConfig = CompressionConfig(),
         ndt = _narrow_int_dtype(lo, hi) if np.issubdtype(values.dtype, np.integer) else values.dtype
         base = np.where(inlier, values - center, 0).astype(ndt)
         out_pos = np.flatnonzero(~inlier)
-        outliers = make_index(values[out_pos], out_pos, nrows=n)
+        outliers = make_index(values[out_pos], out_pos, nrows=n,
+                              capacity=_capacity(len(out_pos), cfg))
         return PlainIndexColumn(base=make_plain(base, nrows=n, offset=center),
                                 outliers=outliers, nrows=n)
 

@@ -52,11 +52,15 @@ class PlainColumn:
 
     ``offset`` implements the paper's §3.2 *centering* for bit-width reduction:
     logical value = values.astype(wide) + offset. offset == 0 for uncentered.
+    It is a *data* leaf (traced, like the ``n`` counts), not static metadata:
+    partitioned execution re-centers every partition independently, and a
+    static center would retrace the query program once per partition
+    (DESIGN.md §4).
     """
 
     values: jax.Array
     nrows: int = static(default=0)
-    offset: Any = static(default=0)
+    offset: Any = 0
 
     @property
     def capacity(self) -> int:
@@ -69,10 +73,16 @@ class PlainColumn:
         dictionary-encoded at ingest — so centering always widens to int32.
         """
         v = self.values
-        if self.offset != 0:
+        if not offset_is_zero(self.offset):
             v = v.astype(jnp.int32 if jnp.issubdtype(v.dtype, jnp.integer) else v.dtype)
             v = v + self.offset
         return v
+
+
+def offset_is_zero(offset) -> bool:
+    """True only for a HOST-side zero offset. A traced/array offset is never
+    "known zero": callers must take the general add-the-offset path."""
+    return isinstance(offset, (int, float)) and offset == 0
 
 
 @_register

@@ -317,3 +317,74 @@ def groupby_aggregate(
         for name in group_names
     }
     return GroupByResult(keys=keys, aggs=out, num_groups=num_groups, valid=gvalid)
+
+
+# ---------------------------------------------------------------------------
+# Cross-partition merge (partitioned execution, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MergedGroupBy:
+    """Host-side merged group-by result: exact-size numpy arrays, groups in
+    lexicographic key order (np.unique)."""
+
+    keys: Dict[str, "np.ndarray"]
+    aggs: Dict[str, "np.ndarray"]
+    num_groups: int
+
+
+def merge_groupby_partials(results: Sequence[GroupByResult],
+                           group_names: Sequence[str],
+                           specs: Sequence[Tuple[str, str, Optional[str]]]):
+    """Re-aggregate per-partition GroupByResult partials on the host.
+
+    ``results`` come from ``Query.build(partial=True)`` programs (one per
+    non-skipped partition); ``specs`` are the ORIGINAL agg specs — the same
+    decomposition applied per-partition is recomputed here so each partial
+    output merges under its combine rule (sum/count add, min/max extremes)
+    and avg finalizes as merged-sum / merged-count.
+    """
+    import numpy as np
+    from repro.core import plan as plan_mod
+
+    partial_specs, finalize = plan_mod.decompose_specs(specs)
+    key_blocks, agg_blocks = [], {o: [] for o, _, _ in partial_specs}
+    key_dtypes = None
+    for r in results:
+        ng = int(r.num_groups)
+        if ng == 0:
+            continue
+        cols = [np.asarray(r.keys[g])[:ng] for g in group_names]
+        if key_dtypes is None:
+            key_dtypes = [c.dtype for c in cols]
+        key_blocks.append(np.stack(cols, axis=1))
+        for o, _, _ in partial_specs:
+            agg_blocks[o].append(np.asarray(r.aggs[o])[:ng])
+    if not key_blocks:
+        keys = {g: np.zeros((0,), np.int32) for g in group_names}
+        aggs = {name: np.zeros((0,), np.float32) for name, _, _ in finalize}
+        return MergedGroupBy(keys=keys, aggs=aggs, num_groups=0)
+
+    all_keys = np.concatenate(key_blocks, axis=0)
+    uniq, inv = np.unique(all_keys, axis=0, return_inverse=True)
+    ng = uniq.shape[0]
+    merged = {}
+    for o, agg, _ in partial_specs:
+        vals = np.concatenate(agg_blocks[o], axis=0)
+        if agg in ("sum", "count"):
+            acc = np.zeros((ng,), vals.dtype)
+            np.add.at(acc, inv, vals)
+        elif agg == "min":
+            acc = np.full((ng,), np.inf, np.float64)
+            np.minimum.at(acc, inv, vals)
+            acc = acc.astype(vals.dtype)
+        else:  # max
+            acc = np.full((ng,), -np.inf, np.float64)
+            np.maximum.at(acc, inv, vals)
+            acc = acc.astype(vals.dtype)
+        merged[o] = acc
+    aggs = plan_mod._apply_finalize(merged, finalize)
+    keys = {g: uniq[:, i].astype(key_dtypes[i])
+            for i, g in enumerate(group_names)}
+    return MergedGroupBy(keys=keys, aggs=aggs, num_groups=ng)

@@ -1,0 +1,417 @@
+"""Partitioned out-of-core query execution (DESIGN.md §4, paper §2.1/§9).
+
+The paper's headline scenario is querying compressed data whose UNCOMPRESSED
+form would not fit device memory. This module supplies the scaling lever the
+single-resident-table ``plan.Query`` path lacks:
+
+  * ``PartitionedTable`` — row-range partitions, each a host-resident
+    ``Table`` with per-partition heterogeneous encodings chosen by the §9
+    heuristics, plus host-side per-partition min/max *zone maps*,
+  * predicate pushdown / partition skipping — a partition whose zone maps
+    prove a query's filters and semi-joins select nothing is never
+    transferred to the device,
+  * ``PartitionedQuery`` — streams the jitted ``Query`` program partition by
+    partition (double-buffering the host->device transfer of partition k+1
+    against compute on k) and merges decomposable aggregate partials.
+
+Capacity bucketing: partition row counts and run/index capacities are rounded
+up to powers of two at ingest, so N ragged partitions share O(log
+capacity-range) jit cache entries instead of compiling N programs. Padding
+rows replicate the partition's last row (extending its final run, never
+adding one) and are excluded by a one-run RLE *base mask* handed to the
+program — the mask's bounds are traced values, so raggedness never retraces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import compress, groupby
+from repro.core import plan as plan_mod
+from repro.core.encodings import make_rle_mask
+from repro.core.plan import (
+    And,
+    Not,
+    Or,
+    Pred,
+    Query,
+    RangePred,
+    _AggOp,
+    _FilterOp,
+    _MapOp,
+    _SemiJoinOp,
+)
+from repro.core.table import Table, dictionary_pass
+
+# Host->device transfer entry point; module-level so tests can stub it to
+# count/observe transfers (the partition-skipping contract is "no transfer").
+device_put = jax.device_put
+
+MIN_PARTITION_BUCKET = 8  # floor for padded per-partition row counts
+
+
+@dataclasses.dataclass
+class Partition:
+    """One row range of a PartitionedTable, encoded and host-resident."""
+
+    table: Table  # encoded columns with host (numpy) leaves
+    rows: int  # valid rows (before padding)
+    padded_rows: int  # pow2-bucketed row count of the encoded buffers
+    row_offset: int  # first global row covered
+    zone_lo: Dict[str, float]  # per-column min over valid rows
+    zone_hi: Dict[str, float]  # per-column max over valid rows
+
+    def nbytes(self) -> int:
+        return self.table.nbytes()
+
+
+def _pad_to_bucket(arrays: Dict[str, np.ndarray], rows: int, padded: int):
+    """Pad each column to ``padded`` rows by replicating the last row.
+
+    Replication extends the final run of every column instead of introducing
+    new runs/values, so it is free under RLE and inside the zone maps.
+    """
+    if padded == rows:
+        return arrays
+    out = {}
+    for name, arr in arrays.items():
+        tail = np.repeat(arr[-1:], padded - rows, axis=0)
+        out[name] = np.concatenate([arr, tail])
+    return out
+
+
+def _host_leaves(tree):
+    """Move a pytree's array leaves to host numpy buffers."""
+    return jax.tree_util.tree_map(np.asarray, tree)
+
+
+class PartitionedTable:
+    """Row-partitioned table: host-side partitions + global dictionaries.
+
+    Duck-types the slice of the ``Table`` interface the plan layer touches
+    (``encoding_of`` / ``code_for`` / ``nrows``), so ``Query``'s predicate
+    reordering and dictionary-literal resolution work unchanged.
+    """
+
+    def __init__(self, partitions: List[Partition],
+                 dictionaries: Dict[str, np.ndarray], nrows: int):
+        self.partitions = partitions
+        self.dictionaries = dictionaries
+        self.nrows = nrows
+
+    @classmethod
+    def from_arrays(
+        cls,
+        data: Dict[str, np.ndarray],
+        cfg: compress.CompressionConfig = compress.CompressionConfig(),
+        num_partitions: Optional[int] = None,
+        partition_rows: Optional[int] = None,
+        boundaries: Optional[Sequence[int]] = None,
+        encodings: Optional[Dict[str, str]] = None,
+    ) -> "PartitionedTable":
+        """Ingest host arrays into row-range partitions.
+
+        Exactly one of ``num_partitions`` / ``partition_rows`` /
+        ``boundaries`` selects the split; ``boundaries`` is a sorted list of
+        cut offsets strictly inside (0, nrows). Encodings are chosen (or
+        forced via ``encodings``) independently PER PARTITION — a column can
+        be RLE in a sorted region and Plain in a high-entropy one.
+        """
+        data, dicts = dictionary_pass(data)
+        # narrow to the device value domain BEFORE zone maps: encode() will
+        # execute on float32, and pruning must agree with what runs (a
+        # float64 zone bound on the wrong side of a literal after rounding
+        # would skip partitions the device would match)
+        data = {k: v.astype(np.float32) if v.dtype == np.float64 else v
+                for k, v in data.items()}
+        n = len(next(iter(data.values()))) if data else 0
+        offsets = _partition_offsets(n, num_partitions, partition_rows,
+                                     boundaries)
+        if cfg.capacity_bucket is None:
+            cfg = dataclasses.replace(cfg, capacity_bucket="pow2")
+        parts = []
+        for start, end in zip(offsets[:-1], offsets[1:]):
+            rows = end - start
+            sliced = {k: v[start:end] for k, v in data.items()}
+            zones = {k: compress.column_minmax(v) for k, v in sliced.items()}
+            zone_lo = {k: z[0] for k, z in zones.items()}
+            zone_hi = {k: z[1] for k, z in zones.items()}
+            padded = compress.next_pow2(rows, MIN_PARTITION_BUCKET) if rows else 0
+            sliced = _pad_to_bucket(sliced, rows, padded)
+            # Pin encoding to the host CPU device: out-of-core data must not
+            # round-trip through the accelerator at ingest (it is being
+            # partitioned precisely because it does not fit there); the
+            # numpy conversion below is then copy-on-host, and device_put
+            # at execution is the FIRST accelerator transfer.
+            with jax.default_device(jax.devices("cpu")[0]):
+                t = Table.from_arrays(sliced, cfg=cfg, encodings=encodings,
+                                      dictionaries=dicts)
+            t.columns = _host_leaves(t.columns)
+            parts.append(Partition(table=t, rows=rows, padded_rows=padded,
+                                   row_offset=start, zone_lo=zone_lo,
+                                   zone_hi=zone_hi))
+        return cls(partitions=parts, dictionaries=dicts, nrows=n)
+
+    # -- Table duck-typing for the plan layer -------------------------------
+
+    def encoding_of(self, name: str) -> str:
+        for p in self.partitions:
+            if p.rows:
+                return p.table.encoding_of(name)
+        return "PlainColumn"
+
+    def code_for(self, name: str, value):
+        if name not in self.dictionaries:
+            return value
+        d = self.dictionaries[name]
+        idx = np.searchsorted(d, value)
+        if idx >= len(d) or d[idx] != value:
+            return -1
+        return int(idx)
+
+    # -- inspection ----------------------------------------------------------
+
+    def decode(self, name: str) -> np.ndarray:
+        """Materialize a column across partitions (tests / inspection)."""
+        chunks = [np.asarray(p.table.decode(name))[:p.rows]
+                  for p in self.partitions if p.rows]
+        vals = (np.concatenate(chunks) if chunks
+                else np.zeros((0,), np.int32))
+        return vals
+
+    def nbytes(self) -> int:
+        return sum(p.nbytes() for p in self.partitions)
+
+    def max_partition_nbytes(self) -> int:
+        """Peak per-partition device footprint of the streamed execution."""
+        return max((p.nbytes() for p in self.partitions if p.rows), default=0)
+
+
+def _partition_offsets(n, num_partitions, partition_rows, boundaries):
+    picked = sum(x is not None
+                 for x in (num_partitions, partition_rows, boundaries))
+    if picked != 1:
+        raise ValueError("pass exactly one of num_partitions / "
+                         "partition_rows / boundaries")
+    if boundaries is not None:
+        cuts = sorted(int(b) for b in boundaries)
+        if any(b < 0 or b > n for b in cuts):
+            raise ValueError(f"boundary outside [0, {n}]")
+        return [0] + cuts + [n]
+    if partition_rows is not None:
+        if partition_rows <= 0:
+            raise ValueError("partition_rows must be positive")
+        return list(range(0, n, partition_rows)) + [n] if n else [0, 0]
+    k = max(int(num_partitions), 1)
+    step = -(-n // k) if n else 0
+    return [min(i * step, n) for i in range(k)] + [n]
+
+
+def rows_for_budget(data: Dict[str, np.ndarray], budget_bytes: int) -> int:
+    """Partition row count so each partition's UNCOMPRESSED working set fits
+    ``budget_bytes`` (the out-of-core sizing rule, DESIGN.md §4)."""
+    row_bytes = 0
+    for arr in data.values():
+        arr = np.asarray(arr)
+        # strings dictionary-encode to int32 codes on device
+        row_bytes += 4 if arr.dtype.kind in ("U", "S", "O") else arr.dtype.itemsize
+    return max(int(budget_bytes // max(row_bytes, 1)), 1)
+
+
+# ---------------------------------------------------------------------------
+# Zone-map predicate pushdown
+# ---------------------------------------------------------------------------
+#
+# Tri-state interval evaluation: ``_maybe_any`` over-approximates "some row
+# in [lo, hi] could satisfy the predicate" (True also when unsure), so a
+# False is a PROOF the partition contributes nothing and can be skipped
+# without a device transfer. ``_definitely_all`` under-approximates "every
+# row satisfies" — it exists for the NOT case (¬a may match only if a is not
+# a tautology on the partition's range).
+
+
+def _lit(table, name, op, value):
+    if isinstance(value, str):
+        return table.code_for(name, value) if op in ("eq", "ne", "isin") else None
+    return value
+
+
+def _maybe_any(expr, zl: Dict[str, float], zh: Dict[str, float],
+               table: PartitionedTable) -> bool:
+    if isinstance(expr, Pred):
+        if expr.col not in zl:
+            return True  # computed/unknown column: cannot prune
+        lo, hi = zl[expr.col], zh[expr.col]
+        if lo > hi:
+            return False  # empty partition interval
+        if expr.op == "isin":
+            lits = [_lit(table, expr.col, "isin", v) for v in expr.literal]
+            return any(v is not None and lo <= v <= hi for v in lits)
+        v = _lit(table, expr.col, expr.op, expr.literal)
+        if v is None:
+            return True
+        return {"eq": lo <= v <= hi, "ne": not (lo == hi == v),
+                "gt": hi > v, "ge": hi >= v,
+                "lt": lo < v, "le": lo <= v}[expr.op]
+    if isinstance(expr, RangePred):
+        if expr.col not in zl:
+            return True
+        lo, hi = zl[expr.col], zh[expr.col]
+        if lo > hi:
+            return False
+        above = hi > expr.lo if not expr.lo_incl else hi >= expr.lo
+        below = lo < expr.hi if not expr.hi_incl else lo <= expr.hi
+        return above and below
+    if isinstance(expr, And):
+        return _maybe_any(expr.a, zl, zh, table) and _maybe_any(expr.b, zl, zh, table)
+    if isinstance(expr, Or):
+        return _maybe_any(expr.a, zl, zh, table) or _maybe_any(expr.b, zl, zh, table)
+    if isinstance(expr, Not):
+        return not _definitely_all(expr.a, zl, zh, table)
+    return True
+
+
+def _definitely_all(expr, zl: Dict[str, float], zh: Dict[str, float],
+                    table: PartitionedTable) -> bool:
+    if isinstance(expr, Pred):
+        if expr.col not in zl:
+            return False
+        lo, hi = zl[expr.col], zh[expr.col]
+        if lo > hi:
+            return True  # vacuously: no rows
+        if expr.op == "isin":
+            lits = [_lit(table, expr.col, "isin", v) for v in expr.literal]
+            return any(v is not None and lo == hi == v for v in lits)
+        v = _lit(table, expr.col, expr.op, expr.literal)
+        if v is None:
+            return False
+        return {"eq": lo == hi == v, "ne": v < lo or v > hi,
+                "gt": lo > v, "ge": lo >= v,
+                "lt": hi < v, "le": hi <= v}[expr.op]
+    if isinstance(expr, RangePred):
+        if expr.col not in zl:
+            return False
+        lo, hi = zl[expr.col], zh[expr.col]
+        if lo > hi:
+            return True
+        above = lo > expr.lo if not expr.lo_incl else lo >= expr.lo
+        below = hi < expr.hi if not expr.hi_incl else hi <= expr.hi
+        return above and below
+    if isinstance(expr, And):
+        return (_definitely_all(expr.a, zl, zh, table)
+                and _definitely_all(expr.b, zl, zh, table))
+    if isinstance(expr, Or):
+        return (_definitely_all(expr.a, zl, zh, table)
+                or _definitely_all(expr.b, zl, zh, table))
+    if isinstance(expr, Not):
+        return not _maybe_any(expr.a, zl, zh, table)
+    return False
+
+
+def partition_can_match(part: Partition, ops, table: PartitionedTable) -> bool:
+    """False iff zone maps PROVE no row of ``part`` survives all filters and
+    semi-joins — the partition-skipping decision (L3-style pushdown).
+
+    Ops are walked in pipeline order: a ``map`` rebinding a column name
+    invalidates that column's zone maps for every LATER filter/semi-join
+    (the ingest-time min/max describe the original values, not the mapped
+    ones), so those predicates fall back to "cannot prune"."""
+    if part.rows == 0:
+        return False
+    zl, zh = dict(part.zone_lo), dict(part.zone_hi)
+    for op in ops:
+        if isinstance(op, _MapOp):
+            zl.pop(op.out, None)
+            zh.pop(op.out, None)
+        elif isinstance(op, _FilterOp):
+            if not _maybe_any(op.expr, zl, zh, table):
+                return False
+        elif isinstance(op, _SemiJoinOp):
+            if op.on not in zl:
+                continue
+            lo, hi = zl[op.on], zh[op.on]
+            keys = np.asarray(op.keys)
+            if not np.any((keys >= lo) & (keys <= hi)):
+                return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Streaming executor
+# ---------------------------------------------------------------------------
+
+
+class PartitionedQuery(Query):
+    """A ``Query`` over a ``PartitionedTable``: same staging API, streaming
+    partial-aggregate execution.
+
+    The pipeline must terminate in ``aggregate`` or ``groupby`` (partials of
+    a bare filter are the per-partition masks, which have no merge story —
+    count them instead). One jitted program serves every partition; the jit
+    cache keys on the partition's (bucketed) column structure, and
+    ``trace_count`` exposes how many distinct programs were actually traced.
+    """
+
+    def __init__(self, table: PartitionedTable):
+        super().__init__(table)
+        self.trace_count = 0
+        self.last_stats: Dict[str, int] = {}
+
+    def _base_mask(self, part: Partition):
+        # One-run RLE mask over the valid rows; bounds are traced values, so
+        # ragged partitions with equal buckets reuse the compiled program.
+        return make_rle_mask([0], [part.rows - 1], nrows=part.padded_rows,
+                             capacity=1)
+
+    def _counted_program(self):
+        inner = self.build(partial=True)
+
+        def counted(columns, key_sets, base_mask):
+            self.trace_count += 1  # body runs only when jit (re)traces
+            return inner(columns, key_sets, base_mask)
+
+        return counted
+
+    def run(self, jit: bool = True):
+        terminal = self.terminal_op()
+        if terminal is None:
+            raise NotImplementedError(
+                "partitioned execution requires a terminal aggregate() or "
+                "groupby() (add e.g. a count aggregate to materialize a "
+                "filter result)")
+        key_sets = tuple(self._prepare_key_sets())
+        if jit:
+            if getattr(self, "_jitted", None) is None:
+                self._jitted = jax.jit(self._counted_program())
+            execute = self._jitted
+        else:
+            execute = self._counted_program()  # never memoized (as in Query)
+
+        ptable: PartitionedTable = self.table
+        todo = [p for p in ptable.partitions
+                if partition_can_match(p, self.ops, ptable)]
+        self.last_stats = {
+            "partitions": len(ptable.partitions),
+            "executed": len(todo),
+            "skipped": len(ptable.partitions) - len(todo),
+        }
+
+        partials = []
+        # Double buffering: dispatch the device_put of partition k+1 before
+        # blocking on partition k's compute (jax dispatch is async, so the
+        # transfer overlaps compute on accelerator backends).
+        pending = device_put(todo[0].table.columns) if todo else None
+        for i, part in enumerate(todo):
+            cols = pending
+            if i + 1 < len(todo):
+                pending = device_put(todo[i + 1].table.columns)
+            partials.append(
+                execute(cols, key_sets, self._base_mask(part)))
+
+        if isinstance(terminal, _AggOp):
+            return plan_mod.merge_scalar_partials(partials, terminal.specs)
+        return groupby.merge_groupby_partials(partials, list(terminal.group),
+                                              terminal.specs)

@@ -275,14 +275,27 @@ class Query:
         out.extend(sorted(block, key=key))
         self.ops = out
 
-    def build(self):
-        """Build the jitted program: (columns, key_sets) -> result."""
+    def build(self, partial: bool = False):
+        """Build the jitted program: (columns, key_sets, base_mask) -> result.
+
+        ``base_mask`` (optional MaskColumn) is ANDed in before any staged
+        operator — the partitioned executor uses it to exclude padding rows
+        of capacity-bucketed partitions (DESIGN.md §4).
+
+        ``partial=True`` switches terminal aggregates to *partial* mode:
+        non-decomposable aggregates are rewritten into decomposable
+        components (avg -> sum + count) via ``decompose_specs`` so that
+        per-partition results can be merged with ``merge_scalar_partials`` /
+        ``groupby.merge_groupby_partials``.
+        """
         self._reorder_semijoins()
         ops = list(self.ops)
+        if partial:
+            ops = [_decompose_op(op) for op in ops]
         table = self.table
 
-        def program(columns, key_sets):
-            mask = None
+        def program(columns, key_sets, base_mask=None):
+            mask = base_mask
             env = dict(columns)
             ks = list(key_sets)
             for op in ops:
@@ -322,6 +335,13 @@ class Query:
             return mask, env
         return program
 
+    def terminal_op(self):
+        """The query's terminal aggregate op (_AggOp / _GroupByOp), or None."""
+        for op in self.ops:
+            if isinstance(op, (_AggOp, _GroupByOp)):
+                return op
+        return None
+
     def run(self, jit: bool = True):
         """Execute: eager key-set preparation + ONE jitted fact pipeline.
 
@@ -329,6 +349,14 @@ class Query:
         calls (warm queries, the paper's measurement mode §9) re-execute
         the compiled program without retracing.
         """
+        key_sets = tuple(self._prepare_key_sets())
+        if not jit:
+            return self.build()(self.table.columns, key_sets)
+        if getattr(self, "_jitted", None) is None:
+            self._jitted = jax.jit(self.build())
+        return self._jitted(self.table.columns, key_sets)
+
+    def _prepare_key_sets(self):
         key_sets = []
         for op in self.ops:
             if isinstance(op, _SemiJoinOp):
@@ -336,11 +364,102 @@ class Query:
                 arr = jnp.asarray(np.concatenate([
                     keys, np.full((1,), _sentinel_for(keys.dtype), keys.dtype)]))
                 key_sets.append((arr, jnp.asarray(len(keys), jnp.int32)))
-        if not jit:
-            return self.build()(self.table.columns, tuple(key_sets))
-        if getattr(self, "_jitted", None) is None:
-            self._jitted = jax.jit(self.build())
-        return self._jitted(self.table.columns, tuple(key_sets))
+        return key_sets
+
+
+# ----------------------- partial-aggregate decomposition -------------------
+#
+# Decomposable aggregates merge across partitions by a simple combine rule
+# (sum/count -> add, min -> min, max -> max). avg is decomposed into
+# sum + count partials and finalized after the merge (paper §2.1's
+# "decomposable aggregation" requirement for partitioned execution).
+
+_COMBINE = {"sum": "add", "count": "add", "min": "min", "max": "max"}
+
+
+def decompose_specs(specs: Sequence[Tuple[str, str, Optional[str]]]):
+    """Rewrite agg specs into decomposable partials + finalize rules.
+
+    Returns (partial_specs, finalize): ``partial_specs`` feed the per-
+    partition program; ``finalize`` is a list of (out_name, kind, operands)
+    with kind "identity" (copy the partial) or "div" (avg = sum / count).
+    """
+    partial_specs, finalize = [], []
+    for out, agg, c in specs:
+        if agg in _COMBINE:
+            partial_specs.append((out, agg, c))
+            finalize.append((out, "identity", (out,)))
+        elif agg == "avg":
+            s, k = f"{out}@sum", f"{out}@cnt"
+            partial_specs.append((s, "sum", c))
+            partial_specs.append((k, "count", None))
+            finalize.append((out, "div", (s, k)))
+        else:
+            raise NotImplementedError(
+                f"aggregate {agg!r} is not decomposable for partitioned "
+                "execution (supported: sum/count/min/max/avg)")
+    # dedupe partials that several finalize rules share (e.g. avg + count)
+    seen, deduped = set(), []
+    for spec in partial_specs:
+        if spec[0] not in seen:
+            seen.add(spec[0])
+            deduped.append(spec)
+    return tuple(deduped), tuple(finalize)
+
+
+def _decompose_op(op):
+    if isinstance(op, _AggOp):
+        return _AggOp(specs=decompose_specs(op.specs)[0])
+    if isinstance(op, _GroupByOp):
+        return _GroupByOp(group=op.group,
+                          specs=decompose_specs(op.specs)[0],
+                          num_groups_cap=op.num_groups_cap)
+    return op
+
+
+def _combine_partials(acc, new, agg):
+    how = _COMBINE[agg]
+    if how == "add":
+        return acc + new
+    return np.minimum(acc, new) if how == "min" else np.maximum(acc, new)
+
+
+def _apply_finalize(partials: Dict[str, np.ndarray], finalize):
+    out = {}
+    for name, kind, operands in finalize:
+        if kind == "identity":
+            out[name] = partials[operands[0]]
+        elif kind == "div":
+            s, c = partials[operands[0]], partials[operands[1]]
+            out[name] = s / np.maximum(c, 1)
+        else:
+            raise ValueError(kind)
+    return out
+
+
+def merge_scalar_partials(partials: Sequence[Dict[str, object]],
+                          specs: Sequence[Tuple[str, str, Optional[str]]]):
+    """Merge per-partition scalar-aggregate partials (host side).
+
+    ``partials`` are outputs of a ``build(partial=True)`` program for an
+    _AggOp terminal; ``specs`` are the ORIGINAL (pre-decomposition) specs.
+    Skipped/empty partitions simply contribute no entry.
+    """
+    partial_specs, finalize = decompose_specs(specs)
+    merged = {}
+    for o, agg, _ in partial_specs:
+        vals = [np.asarray(p[o]) for p in partials]
+        if not vals:
+            merged[o] = (np.int32(0) if agg == "count"
+                         else np.float32(0) if agg == "sum"
+                         else np.float32(np.inf) if agg == "min"
+                         else np.float32(-np.inf))
+            continue
+        acc = vals[0]
+        for v in vals[1:]:
+            acc = _combine_partials(acc, v, agg)
+        merged[o] = acc
+    return _apply_finalize(merged, finalize)
 
 
 def _mask_cardinality(m):

@@ -15,6 +15,32 @@ from repro.core import compress
 from repro.core.encodings import decode_column
 
 
+def dictionary_pass(data: Dict[str, np.ndarray]):
+    """Value+dictionary encode string / out-of-int32-domain columns (TQP §2.1).
+
+    Returns (data', dictionaries): data' has those columns replaced by int32
+    codes. Split out of ``Table.from_arrays`` so partitioned ingest can run
+    ONE global pass — every partition then shares the same code space, which
+    partial-aggregate merging and predicate pushdown rely on (DESIGN.md §4).
+    """
+    out, dicts = {}, {}
+    nrows = None
+    for name, arr in data.items():
+        arr = np.asarray(arr)
+        nrows = len(arr) if nrows is None else nrows
+        if len(arr) != nrows:
+            raise ValueError(f"column {name}: length mismatch")
+        wide_int = arr.dtype.kind == "i" and arr.size and (
+            arr.min() < np.iinfo(np.int32).min
+            or arr.max() > np.iinfo(np.int32).max)
+        if arr.dtype.kind in ("U", "S", "O") or wide_int:
+            codes, dictionary = compress.dictionary_encode(arr)
+            dicts[name] = dictionary
+            arr = codes
+        out[name] = arr
+    return out, dicts
+
+
 @dataclasses.dataclass
 class Table:
     columns: Dict[str, object]
@@ -27,25 +53,23 @@ class Table:
         data: Dict[str, np.ndarray],
         cfg: compress.CompressionConfig = compress.CompressionConfig(),
         encodings: Optional[Dict[str, str]] = None,
+        dictionaries: Optional[Dict[str, np.ndarray]] = None,
     ) -> "Table":
         """Ingest host arrays; choose encodings per the §9 heuristics unless
-        overridden per-column via ``encodings``."""
-        cols, dicts = {}, {}
+        overridden per-column via ``encodings``.
+
+        ``dictionaries``: pre-computed global dictionaries (partitioned
+        ingest) — ``data`` must already hold codes for those columns.
+        """
+        if dictionaries is None:
+            data, dicts = dictionary_pass(data)
+        else:
+            dicts = dictionaries
+        cols = {}
         nrows = None
         for name, arr in data.items():
             arr = np.asarray(arr)
             nrows = len(arr) if nrows is None else nrows
-            if len(arr) != nrows:
-                raise ValueError(f"column {name}: length mismatch")
-            wide_int = arr.dtype.kind == "i" and arr.size and (
-                arr.min() < np.iinfo(np.int32).min
-                or arr.max() > np.iinfo(np.int32).max)
-            if arr.dtype.kind in ("U", "S", "O") or wide_int:
-                # strings AND out-of-int32-domain integers are value+dict
-                # encoded (TQP §2.1); codes are int32 on device.
-                codes, dictionary = compress.dictionary_encode(arr)
-                dicts[name] = dictionary
-                arr = codes
             enc = (encodings or {}).get(name)
             cols[name] = compress.encode(arr, cfg, encoding=enc)
         return cls(columns=cols, nrows=nrows or 0, dictionaries=dicts)

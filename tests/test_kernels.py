@@ -76,3 +76,77 @@ def test_segment_reduce_minmax_fallback(rng, reduce):
                              reduce=reduce, use_pallas=True, interpret=True)
     want = ref.ref_segment_reduce(jnp.asarray(v), jnp.asarray(ids), 16, reduce)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Padding-tail behaviour the partitioned merge path relies on (DESIGN.md §4):
+# capacity buffers are pow2-bucketed, so kernels constantly see lengths that
+# are NOT tile multiples plus sentinel/out-of-range padding ids.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,s", [(1, 4), (1000, 7), (1025, 16), (3000, 33),
+                                 (4101, 16)])
+def test_segment_reduce_non_tile_lengths(rng, n, s):
+    """n not a multiple of SEG_TILE: the kernel pads internally; the pad ids
+    equal num_segments and must contribute nothing."""
+    v = rng.random(n).astype(np.float32)
+    ids = rng.integers(0, s, n).astype(np.int32)
+    got = ops.segment_reduce(jnp.asarray(v), jnp.asarray(ids), s,
+                             use_pallas=True, interpret=True)
+    want = ref.ref_segment_reduce(jnp.asarray(v), jnp.asarray(ids), s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_segment_reduce_out_of_range_ids(rng):
+    """Explicit out-of-range ids (== num_segments, the capacity-padding drop
+    slot) in the INPUT, not just the internal pad: must contribute 0."""
+    n, s = 2048, 8
+    v = rng.random(n).astype(np.float32)
+    ids = rng.integers(0, s, n).astype(np.int32)
+    ids[::5] = s  # every 5th value dropped
+    got = ops.segment_reduce(jnp.asarray(v), jnp.asarray(ids), s,
+                             use_pallas=True, interpret=True)
+    keep = np.asarray(ids) < s
+    want = np.zeros((s,), np.float64)
+    np.add.at(want, ids[keep], v[keep].astype(np.float64))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("nrows", [1, 100, 2047, 2049, 5000])
+def test_rle_decode_non_tile_nrows(rng, nrows):
+    """nrows not a multiple of ROW_TILE: tail rows past nrows are produced by
+    the padded grid but sliced off; runs ending at nrows-1 must survive."""
+    n_runs = min(max(nrows // 10, 1), 64)
+    starts = np.sort(rng.choice(nrows, n_runs, replace=False)).astype(np.int32)
+    ends = np.concatenate([starts[1:] - 1, [nrows - 1]]).astype(np.int32)
+    vals = rng.integers(1, 100, n_runs).astype(np.int32)
+    args = (jnp.asarray(vals), jnp.asarray(starts), jnp.asarray(ends),
+            jnp.asarray(n_runs, jnp.int32), nrows)
+    got = ops.rle_decode(*args, use_pallas=True, interpret=True)
+    want = ref.ref_rle_decode(*args)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rle_decode_capacity_padding_sentinels(rng):
+    """Capacity > n: padding slots carry the sentinel starts = ends = nrows
+    (out of row range) and must decode as gaps, exactly like make_rle pads."""
+    nrows, cap = 3000, 16
+    starts = np.array([0, 500, 2900], np.int32)
+    ends = np.array([99, 999, 2999], np.int32)
+    vals = np.array([3, 5, 7], np.int32)
+    pad = cap - len(starts)
+    starts_p = np.concatenate([starts, np.full((pad,), nrows, np.int32)])
+    ends_p = np.concatenate([ends, np.full((pad,), nrows, np.int32)])
+    vals_p = np.concatenate([vals, np.zeros((pad,), np.int32)])
+    args = (jnp.asarray(vals_p), jnp.asarray(starts_p), jnp.asarray(ends_p),
+            jnp.asarray(len(starts), jnp.int32), nrows)
+    got = ops.rle_decode(*args, use_pallas=True, interpret=True)
+    want = ref.ref_rle_decode(*args)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and against the dense oracle built by hand
+    dense = np.zeros((nrows,), np.int32)
+    for v, s, e in zip(vals, starts, ends):
+        dense[s:e + 1] = v
+    np.testing.assert_array_equal(np.asarray(got), dense)

@@ -1,0 +1,401 @@
+"""Partitioned out-of-core execution (DESIGN.md §4): conformance vs the
+single-table path and dense numpy oracles, zone-map skipping, and the
+bucketed-capacity compile-count guarantee."""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import compress
+from repro.core import partition as P
+from repro.core.groupby import MergedGroupBy
+from repro.core.partition import PartitionedQuery, PartitionedTable
+from repro.core.plan import Query, col
+from repro.core.table import Table
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+from benchmarks.bench_tpch import SORT_ORDERS, make_lineitem, q1, q6, q17, q19  # noqa: E402
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+CFG = compress.CompressionConfig(plain_threshold=1000)
+
+
+# ---------------------------------------------------------------------------
+# result normalization
+# ---------------------------------------------------------------------------
+
+
+def groupby_rows(res, group_names, agg_names):
+    """(keys matrix, aggs dict) restricted to valid groups, sorted by key —
+    works for both GroupByResult (device, padded) and MergedGroupBy."""
+    if isinstance(res, MergedGroupBy):
+        ng = res.num_groups
+        keys = np.stack([np.asarray(res.keys[g]) for g in group_names], axis=1)
+        aggs = {a: np.asarray(res.aggs[a]) for a in agg_names}
+    else:
+        ng = int(res.num_groups)
+        keys = np.stack(
+            [np.asarray(res.keys[g])[:ng] for g in group_names], axis=1)
+        aggs = {a: np.asarray(res.aggs[a])[:ng] for a in agg_names}
+    order = np.lexsort(tuple(keys[:, i] for i in reversed(range(keys.shape[1]))))
+    return keys[order], {a: v[order] for a, v in aggs.items()}, ng
+
+
+def assert_close(got, want, tol=1e-3):
+    got, want = np.asarray(got, np.float64), np.asarray(want, np.float64)
+    denom = np.maximum(np.abs(want), 1.0)
+    np.testing.assert_array_less(np.abs(got - want) / denom, tol)
+
+
+# ---------------------------------------------------------------------------
+# TPC-H-analogue conformance (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def _tables(data, num_partitions=5):
+    t = Table.from_arrays(data, cfg=CFG)
+    pt = PartitionedTable.from_arrays(data, cfg=CFG,
+                                      num_partitions=num_partitions)
+    return t, pt
+
+
+def test_q1_partitioned_matches_single_and_oracle(rng):
+    data = make_lineitem(rng, 120_000, order=SORT_ORDERS["Q1"])
+    t, pt = _tables(data)
+    single = q1(t).run()
+    parted = q1(pt).run()
+    names = ["returnflag", "linestatus"]
+    aggs = ["sum_qty", "sum_price", "avg_disc", "cnt"]
+    ks, as_, ngs = groupby_rows(single, names, aggs)
+    kp, ap, ngp = groupby_rows(parted, names, aggs)
+    assert ngs == ngp
+    np.testing.assert_array_equal(ks, kp)
+    sel = data["shipdate"] <= 2400
+    for i, (rf, ls) in enumerate(kp):
+        m = sel & (data["returnflag"] == rf) & (data["linestatus"] == ls)
+        assert int(ap["cnt"][i]) == int(m.sum())
+        assert_close(ap["sum_qty"][i], data["quantity"][m].sum())
+        assert_close(ap["sum_price"][i], data["price"][m].astype(np.float64).sum())
+        assert_close(ap["avg_disc"][i], data["discount"][m].mean())
+        assert_close(as_["sum_price"][i], ap["sum_price"][i])
+
+
+def test_q6_partitioned_matches_single_and_oracle(rng):
+    data = make_lineitem(rng, 120_000, order=SORT_ORDERS["Q6"])
+    t, pt = _tables(data)
+    single = q6(t).run()
+    parted = q6(pt).run()
+    d = data
+    sel = ((d["shipdate"] >= 500) & (d["shipdate"] <= 864)
+           & (d["discount"] >= 5) & (d["discount"] <= 7) & (d["quantity"] < 24))
+    want = (d["price"][sel].astype(np.float64) * d["discount"][sel]).sum()
+    assert_close(parted["revenue"], want)
+    assert_close(parted["revenue"], float(single["revenue"]))
+
+
+@pytest.mark.parametrize("qname,qfn", [("Q17", q17), ("Q19", q19)])
+def test_q17_q19_partitioned_match(rng, qname, qfn):
+    n = 120_000
+    data = make_lineitem(rng, n, order=SORT_ORDERS[qname])
+    part_keys = np.unique(rng.integers(0, n // 30, n // 600)).astype(np.int32)
+    t, pt = _tables(data)
+    single = qfn(t, part_keys).run()
+    parted = qfn(pt, part_keys).run()
+    d = data
+    isin = np.isin(d["partkey"], part_keys)
+    if qname == "Q17":
+        sel = isin & (d["quantity"] < 10)
+        assert int(parted["c"]) == int(sel.sum()) == int(single["c"])
+        assert_close(parted["sum_price"], d["price"][sel].astype(np.float64).sum())
+    else:
+        sel = (isin & (d["quantity"] >= 5) & (d["quantity"] <= 30)
+               & (d["shipdate"] > 100))
+        want = (d["price"][sel].astype(np.float64) * d["discount"][sel]).sum()
+        assert_close(parted["revenue"], want)
+        assert_close(parted["revenue"], float(single["revenue"]))
+
+
+# ---------------------------------------------------------------------------
+# edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_empty_partitions_and_all_rows_filtered(rng):
+    n = 10_000
+    data = {
+        "k": np.sort(rng.integers(0, 50, n)).astype(np.int32),
+        "v": rng.random(n).astype(np.float32),
+    }
+    # duplicate cut -> empty partition; 1-row tail partition
+    pt = PartitionedTable.from_arrays(
+        data, cfg=CFG, boundaries=[2000, 2000, 7000, n - 1])
+    assert [p.rows for p in pt.partitions] == [2000, 0, 5000, n - 1 - 7000, 1]
+
+    q = (PartitionedQuery(pt).filter(col("k") >= 0)
+         .aggregate({"c": ("count", None), "s": ("sum", "v")}))
+    r = q.run()
+    assert int(r["c"]) == n
+    assert_close(r["s"], data["v"].astype(np.float64).sum())
+
+    # all rows filtered out everywhere: zone maps prove it, nothing executes
+    q2 = (PartitionedQuery(pt).filter(col("k") > 100)
+          .aggregate({"c": ("count", None), "s": ("sum", "v")}))
+    r2 = q2.run()
+    assert int(r2["c"]) == 0 and float(r2["s"]) == 0.0
+    assert q2.last_stats["executed"] == 0
+
+    # selective predicate: survives pruning but selects nothing on-device
+    q3 = (PartitionedQuery(pt).filter((col("k") == 10) & (col("v") > 2.0))
+          .aggregate({"c": ("count", None)}))
+    assert int(q3.run()["c"]) == 0
+
+
+def test_groupby_merge_handles_disjoint_groups(rng):
+    # each partition contributes a different group-key set
+    k = np.repeat(np.arange(8, dtype=np.int32), 1000)
+    v = rng.random(8000).astype(np.float32)
+    pt = PartitionedTable.from_arrays({"k": k, "v": v}, cfg=CFG,
+                                      partition_rows=2000)
+    r = (PartitionedQuery(pt)
+         .groupby(["k"], {"s": ("sum", "v"), "mn": ("min", "v"),
+                          "mx": ("max", "v"), "a": ("avg", "v"),
+                          "c": ("count", None)}, num_groups_cap=16).run())
+    assert r.num_groups == 8
+    for i, kk in enumerate(r.keys["k"]):
+        m = k == kk
+        assert int(r.aggs["c"][i]) == int(m.sum())
+        assert_close(r.aggs["s"][i], v[m].astype(np.float64).sum())
+        assert_close(r.aggs["mn"][i], v[m].min(), tol=1e-5)
+        assert_close(r.aggs["mx"][i], v[m].max(), tol=1e-5)
+        assert_close(r.aggs["a"][i], v[m].mean())
+
+
+def test_map_rebinding_disables_stale_zone_maps(rng):
+    """A filter on a column rewritten by an earlier map() must not be pruned
+    against the ingest-time zone maps of the ORIGINAL values."""
+    from repro.core import arithmetic
+    n = 1000
+    data = {"v": np.full(n, 5, np.int32)}
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=4)
+    q = (PartitionedQuery(pt)
+         .map("v", lambda env: arithmetic.scalar_op(env["v"], "add", 100))
+         .filter(col("v") > 50)
+         .aggregate({"c": ("count", None)}))
+    r = q.run()
+    assert int(r["c"]) == n  # mapped values are 105 everywhere
+    assert q.last_stats["skipped"] == 0
+
+
+def test_nan_does_not_poison_zone_maps(rng):
+    v = rng.random(800).astype(np.float32) * 10
+    v[100] = np.nan
+    pt = PartitionedTable.from_arrays({"v": v}, cfg=CFG, num_partitions=4)
+    r = (PartitionedQuery(pt).filter(col("v") > 2.0)
+         .aggregate({"c": ("count", None)}).run())
+    with np.errstate(invalid="ignore"):
+        want = int((v > 2.0).sum())
+    assert int(r["c"]) == want
+
+
+def test_float64_zone_maps_match_narrowed_execution():
+    # 999.99999999 rounds to 1000.0 in float32: pruning must see the
+    # narrowed value or it would "prove" v >= 1000.0 selects nothing
+    v = np.full(512, 999.99999999, np.float64)
+    pt = PartitionedTable.from_arrays({"v": v}, cfg=CFG, num_partitions=4)
+    r = (PartitionedQuery(pt).filter(col("v") >= 1000.0)
+         .aggregate({"c": ("count", None)}).run())
+    assert int(r["c"]) == 512
+
+
+def test_unjitted_run_does_not_poison_jit_cache(rng):
+    data = {"a": np.sort(rng.integers(0, 20, 4000)).astype(np.int32)}
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=4)
+    q = (PartitionedQuery(pt).filter(col("a") > 3)
+         .aggregate({"c": ("count", None)}))
+    want = int((data["a"] > 3).sum())
+    assert int(q.run(jit=False)["c"]) == want
+    assert int(q.run()["c"]) == want  # jitted path
+    traces = q.trace_count
+    assert int(q.run()["c"]) == want  # warm jitted rerun
+    assert q.trace_count == traces  # would grow per-partition if eager
+
+
+def test_requires_terminal_aggregate(rng):
+    pt = PartitionedTable.from_arrays(
+        {"a": np.arange(100, dtype=np.int32)}, cfg=CFG, num_partitions=2)
+    with pytest.raises(NotImplementedError):
+        PartitionedQuery(pt).filter(col("a") > 3).run()
+
+
+def test_rows_for_budget():
+    data = {"a": np.zeros(10, np.int32), "b": np.zeros(10, np.float32),
+            "s": np.array(["x"] * 10)}
+    # 4 + 4 + 4 bytes/row -> 1 MiB budget = 87381 rows
+    assert P.rows_for_budget(data, 1 << 20) == (1 << 20) // 12
+
+
+# ---------------------------------------------------------------------------
+# zone-map partition skipping: a pruned partition is never transferred
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def transfer_counter(monkeypatch):
+    calls = []
+    real = P.device_put
+
+    def counting_device_put(tree):
+        calls.append(tree)
+        return real(tree)
+
+    monkeypatch.setattr(P, "device_put", counting_device_put)
+    return calls
+
+
+def test_partition_skip_saves_transfers(rng, transfer_counter):
+    n = 40_000
+    data = {
+        "date": np.sort(rng.integers(0, 1000, n)).astype(np.int32),
+        "v": rng.random(n).astype(np.float32),
+    }
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=8)
+    lo = int(pt.partitions[3].zone_lo["date"])
+    hi = int(pt.partitions[3].zone_hi["date"])
+    # predicate strictly inside partition 3's zone range; interior partitions
+    # of a sorted column have disjoint ranges, so at most its two neighbours
+    # can share the boundary values
+    q = (PartitionedQuery(pt).filter(col("date").between(lo, hi))
+         .aggregate({"c": ("count", None), "s": ("sum", "v")}))
+    r = q.run()
+    sel = (data["date"] >= lo) & (data["date"] <= hi)
+    assert int(r["c"]) == int(sel.sum())
+    assert_close(r["s"], data["v"][sel].astype(np.float64).sum())
+    assert len(transfer_counter) == q.last_stats["executed"] <= 3
+    assert q.last_stats["skipped"] >= 5
+
+    # fully out-of-range predicate: zero transfers
+    before = len(transfer_counter)
+    q2 = (PartitionedQuery(pt).filter(col("date") > 10_000)
+          .aggregate({"c": ("count", None)}))
+    assert int(q2.run()["c"]) == 0
+    assert len(transfer_counter) == before  # no partition touched the device
+
+
+def test_semi_join_zone_skip(rng, transfer_counter):
+    n = 20_000
+    data = {"fk": np.sort(rng.integers(0, 1000, n)).astype(np.int32),
+            "v": rng.random(n).astype(np.float32)}
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=10)
+    keys = np.arange(0, 80, dtype=np.int32)  # only the first zone range
+    q = (PartitionedQuery(pt).semi_join("fk", keys)
+         .aggregate({"c": ("count", None)}))
+    r = q.run()
+    assert int(r["c"]) == int(np.isin(data["fk"], keys).sum())
+    assert q.last_stats["skipped"] > 0
+    assert len(transfer_counter) == q.last_stats["executed"]
+
+
+# ---------------------------------------------------------------------------
+# bucketed capacities bound jit compilations (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_compile_count_is_bucket_bound_not_partition_bound(rng):
+    n = 60_000
+    data = {
+        "v": (rng.integers(0, 100, n) + 100_000).astype(np.int32),  # centered
+        "r": np.sort(rng.integers(0, 40, n)).astype(np.int32),  # RLE
+        "g": rng.integers(0, 6, n).astype(np.int32),
+    }
+    cuts = sorted(rng.choice(np.arange(1, n), 23, replace=False).tolist())
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, boundaries=cuts)
+    n_parts = sum(1 for p in pt.partitions if p.rows)
+    assert n_parts >= 20
+
+    q = (PartitionedQuery(pt).filter(col("v") > 100_020)
+         .groupby(["g"], {"s": ("sum", "v"), "c": ("count", None)},
+                  num_groups_cap=8))
+    r = q.run()
+
+    # the jit cache keys on (padded rows, bucketed capacities, encodings) —
+    # count the distinct signatures the ingest actually produced
+    def signature(p):
+        return (p.padded_rows, tuple(
+            (name, type(c).__name__, jax.tree_util.tree_map(np.shape, c))
+            for name, c in sorted(p.table.columns.items())))
+
+    distinct = len({str(signature(p)) for p in pt.partitions if p.rows})
+    assert q.trace_count <= distinct
+    # O(log capacity-range), not O(N): far fewer programs than partitions
+    assert q.trace_count < n_parts / 2
+    # warm re-run: zero new traces
+    before = q.trace_count
+    r2 = q.run()
+    assert q.trace_count == before
+    np.testing.assert_array_equal(np.asarray(r.aggs["c"]),
+                                  np.asarray(r2.aggs["c"]))
+
+
+# ---------------------------------------------------------------------------
+# property-based conformance (randomized boundaries + encodings)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    settings.register_profile("part", max_examples=12, deadline=None)
+    settings.load_profile("part")
+
+    @given(
+        n=st.integers(50, 1500),
+        seed=st.integers(0, 2**31 - 1),
+        n_cuts=st.integers(0, 6),
+        enc_a=st.sampled_from([None, "plain", "rle"]),
+        enc_b=st.sampled_from([None, "plain"]),
+        thresh=st.integers(-5, 60),
+        use_semijoin=st.booleans(),
+    )
+    def test_property_partitioned_conformance(n, seed, n_cuts, enc_a, enc_b,
+                                              thresh, use_semijoin):
+        rng = np.random.default_rng(seed)
+        data = {
+            "a": np.sort(rng.integers(0, 8, n)).astype(np.int32),
+            "b": rng.integers(0, 50, n).astype(np.int32),
+            "c": rng.random(n).astype(np.float32),
+        }
+        cuts = sorted(rng.integers(0, n + 1, n_cuts).tolist())  # dups allowed
+        encodings = {}
+        if enc_a:
+            encodings["a"] = enc_a
+        if enc_b:
+            encodings["b"] = enc_b
+        pt = PartitionedTable.from_arrays(
+            data, cfg=CFG, boundaries=cuts, encodings=encodings or None)
+        q = PartitionedQuery(pt).filter(col("b") > thresh)
+        sel = data["b"] > thresh
+        if use_semijoin:
+            keys = np.unique(rng.integers(0, 8, 3)).astype(np.int32)
+            q = q.semi_join("a", keys)
+            sel = sel & np.isin(data["a"], keys)
+        r = (q.groupby(["a"], {"s": ("sum", "c"), "mn": ("min", "b"),
+                               "mx": ("max", "b"), "av": ("avg", "c"),
+                               "cnt": ("count", None)}, num_groups_cap=16)
+             .run())
+        want_keys = np.unique(data["a"][sel])
+        keys_got, aggs, ng = groupby_rows(r, ["a"], ["s", "mn", "mx", "av", "cnt"])
+        assert ng == len(want_keys)
+        np.testing.assert_array_equal(keys_got[:, 0], want_keys)
+        for i, k in enumerate(want_keys):
+            m = sel & (data["a"] == k)
+            assert int(aggs["cnt"][i]) == int(m.sum())
+            assert_close(aggs["s"][i], data["c"][m].astype(np.float64).sum())
+            assert int(aggs["mn"][i]) == int(data["b"][m].min())
+            assert int(aggs["mx"][i]) == int(data["b"][m].max())
+            assert_close(aggs["av"][i], data["c"][m].mean())

@@ -2,6 +2,8 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")  # tier-1 degrades to skip, not collection error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import encodings as E
