@@ -58,6 +58,30 @@ def _capacity(k: int, cfg: CompressionConfig) -> int:
     return cap
 
 
+def column_domain(values: np.ndarray,
+                  dictionary: Optional[np.ndarray] = None
+                  ) -> Optional[Tuple[int, int]]:
+    """Dense bounded value domain ``(lo, size)`` of a column, or None.
+
+    Recorded at ingest (host-side) and consumed by the sort-free grouping
+    path (DESIGN.md §5): group keys whose domain is known and small are
+    grouped by direct scatter over the code domain instead of argsort.
+
+      * dictionary-encoded columns: the GLOBAL code space [0, len(dict))
+        — every partition shares it, so the (lo, size) constants baked
+        into a jitted program are valid for all partitions,
+      * integer/bool columns: [vmin, vmax] over the ingested values,
+      * float / empty columns: None (unbounded — argsort path).
+    """
+    if dictionary is not None:
+        return (0, int(len(dictionary)))
+    values = np.asarray(values)
+    if values.size == 0 or values.dtype.kind not in "iub":
+        return None
+    lo, hi = int(values.min()), int(values.max())
+    return (lo, hi - lo + 1)
+
+
 def column_minmax(values: np.ndarray) -> Tuple[float, float]:
     """Host-side zone-map entry (min, max) for a column slice.
 

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import primitives as prim
+from repro.kernels import dispatch
 from repro.core.encodings import (
     POS_DTYPE,
     IndexColumn,
@@ -92,39 +93,32 @@ def align_columns(cols: Dict[str, object], mask=None) -> SegmentView:
     nrows = items[0][1].nrows
 
     if run_ok:
+        src_vals = {name: _as_runs(c)[0] for name, c in items}
+        run_lists = [_as_runs(c)[1:] for _, c in items]
+        if mask is not None:
+            run_lists.append(_mask_as_runs(mask, nrows))
+        if len(run_lists) == 1:
+            # single position-explicit column, no mask: its runs ARE the
+            # segmentation (identity indices, no sweep needed).
+            name0, c0 = items[0]
+            _, s, e, n = _as_runs(c0)
+            valid = valid_slots(n, c0.capacity)
+            lengths = jnp.where(valid, e - s + 1, 0)
+            values = {name0: jnp.where(valid, src_vals[name0], 0)}
+            return SegmentView(values=values, lengths=lengths, valid=valid,
+                               n=n, starts=s, ends=e)
+        # k-way fused sweep (one event sort) instead of chained pairwise
+        # intersects whose intermediate capacities grow additively.
         cap_total = sum(c.capacity for _, c in items)
         if mask is not None:
             cap_total += mask.capacity
-        name0, c0 = items[0]
-        v0, s, e, n = _as_runs(c0)
-        gathered = {name0: jnp.arange(c0.capacity, dtype=POS_DTYPE)}
-        src_vals = {name0: v0}
-        # widen to cap_total once
-        s = prim.pad_positions(jnp.resize(s, (s.shape[0],)), n, nrows)
-        cur_cap = s.shape[0]
-        cur_idx = {name0: jnp.arange(cur_cap, dtype=POS_DTYPE)}
-        cur_s, cur_e, cur_n = s, e, n
-        for name, c in items[1:]:
-            v, cs, ce, cn = _as_runs(c)
-            src_vals[name] = v
-            out_cap = min(cap_total, cur_cap + c.capacity)
-            ns, ne, i_cur, i_col, nn = prim.range_intersect(
-                cur_s, cur_e, cur_n, cs, ce, cn, nrows, out_cap)
-            cur_idx = {k: idx[i_cur] for k, idx in cur_idx.items()}
-            cur_idx[name] = i_col
-            cur_s, cur_e, cur_n, cur_cap = ns, ne, nn, out_cap
-        if mask is not None:
-            ms, me, mn = _mask_as_runs(mask, nrows)
-            out_cap = cap_total
-            ns, ne, i_cur, _, nn = prim.range_intersect(
-                cur_s, cur_e, cur_n, ms, me, mn, nrows, out_cap)
-            cur_idx = {k: idx[i_cur] for k, idx in cur_idx.items()}
-            cur_s, cur_e, cur_n, cur_cap = ns, ne, nn, out_cap
-        valid = valid_slots(cur_n, cur_cap)
-        lengths = jnp.where(valid, cur_e - cur_s + 1, 0)
-        values = {k: jnp.where(valid, src_vals[k][cur_idx[k]], 0) for k in cur_idx}
+        s, e, idxs, n = prim.range_intersect_multi(run_lists, nrows, cap_total)
+        valid = valid_slots(n, cap_total)
+        lengths = jnp.where(valid, e - s + 1, 0)
+        values = {name: jnp.where(valid, src_vals[name][idxs[j]], 0)
+                  for j, (name, _) in enumerate(items)}
         return SegmentView(values=values, lengths=lengths, valid=valid,
-                           n=cur_n, starts=cur_s, ends=cur_e)
+                           n=n, starts=s, ends=e)
 
     # Row-level fallback: any Plain participant (or Plain mask).
     live = jnp.ones((nrows,), jnp.bool_)
@@ -147,26 +141,79 @@ def align_columns(cols: Dict[str, object], mask=None) -> SegmentView:
 # ---------------------------------------------------------------------------
 
 
-def grouping(view: SegmentView, group_names: Sequence[str], num_groups_cap: int):
+def _bounded_key_domain(view: SegmentView, group_names: Sequence[str],
+                        key_domains) -> Optional[int]:
+    """Mixed-radix product domain size when the sort-free path may fire:
+    every group key integer-valued with ingest-recorded (lo, size) domain
+    metadata, and the exact product domain small enough to scatter over
+    (DESIGN.md §5). None -> argsort path."""
+    pol = dispatch.policy()
+    if not pol.enable_sort_free or not key_domains:
+        return None
+    i32 = jnp.iinfo(jnp.int32)
+    total = 1
+    for name in group_names:
+        dom = key_domains.get(name)
+        if dom is None or not jnp.issubdtype(view.values[name].dtype,
+                                             jnp.integer):
+            return None
+        lo, size = int(dom[0]), int(dom[1])
+        # the code arithmetic is int32: a domain whose bounds fall outside
+        # int32 (e.g. uint32 keys past 2^31) must take the argsort path
+        if lo < i32.min or lo + size - 1 > i32.max:
+            return None
+        total *= size
+        if total > pol.sort_free_max_domain:
+            return None
+    return total if total > 0 else None
+
+
+def grouping(view: SegmentView, group_names: Sequence[str], num_groups_cap: int,
+             key_domains: Optional[Dict[str, Tuple[int, int]]] = None):
     """Inverse index per segment over unique group-key tuples.
 
-    Multi-column keys are combined iteratively (id' = id * cap + inv); the
-    combined key gets a final unique pass for dense ids. Returns
-    (gid[segments], num_groups, rep_index[num_groups_cap]).
+    **Sort-free fast path**: when every group key has a bounded dense
+    domain (dictionary codes, centered int8/int16 — ``key_domains`` maps
+    name -> (lo, size) from ingest), the multi-column key is composed by
+    mixed-radix arithmetic over the EXACT domain sizes and grouped by one
+    ``unique_bounded`` scatter — no argsort anywhere. Group ids come out
+    in the same lexicographic key order as the argsort path, so results
+    are identical.
+
+    **Argsort fallback**: keys are combined iteratively
+    (id' = id * cap + inv); the combined key gets a final unique pass for
+    dense ids.
+
+    Returns (gid[segments], num_groups, rep_index[num_groups_cap]).
     """
-    combined = None
-    for name in group_names:
-        vals = view.values[name]
-        if jnp.issubdtype(vals.dtype, jnp.integer) and vals.dtype != jnp.int32:
-            # centered narrow columns (int8/int16) widen for key arithmetic;
-            # also keeps the sentinel (int32 max) collision-free
-            vals = vals.astype(jnp.int32)
-        _, inv, _ = prim.unique_with_inverse(
-            vals, view.valid, num_groups_cap)
-        # combined-key arithmetic is int32: requires num_groups_cap**n_cols < 2**31
-        inv32 = inv.astype(jnp.int32)
-        combined = inv32 if combined is None else combined * num_groups_cap + inv32
-    _, gid, num_groups = prim.unique_with_inverse(combined, view.valid, num_groups_cap)
+    bounded = _bounded_key_domain(view, group_names, key_domains)
+    if bounded is not None:
+        combined = None
+        for name in group_names:
+            lo, size = key_domains[name]
+            code = view.values[name].astype(jnp.int32) - jnp.asarray(
+                lo, jnp.int32)
+            combined = code if combined is None else combined * size + code
+        _, gid, num_groups = prim.unique_bounded(
+            combined, view.valid, bounded, cap_groups=num_groups_cap)
+    else:
+        combined = None
+        for name in group_names:
+            vals = view.values[name]
+            if jnp.issubdtype(vals.dtype, jnp.integer) and vals.dtype != jnp.int32:
+                # centered narrow columns (int8/int16) widen for key
+                # arithmetic; also keeps the sentinel (int32 max)
+                # collision-free
+                vals = vals.astype(jnp.int32)
+            _, inv, _ = prim.unique_with_inverse(
+                vals, view.valid, num_groups_cap)
+            # combined-key arithmetic is int32:
+            # requires num_groups_cap**n_cols < 2**31
+            inv32 = inv.astype(jnp.int32)
+            combined = (inv32 if combined is None
+                        else combined * num_groups_cap + inv32)
+        _, gid, num_groups = prim.unique_with_inverse(
+            combined, view.valid, num_groups_cap)
     # representative segment per group (first occurrence) for key recovery
     seg_ids = jnp.arange(gid.shape[0], dtype=POS_DTYPE)
     big = jnp.asarray(jnp.iinfo(jnp.int32).max, POS_DTYPE)
@@ -182,7 +229,9 @@ def grouping(view: SegmentView, group_names: Sequence[str], num_groups_cap: int)
 
 
 def _segsum(values, gid, cap):
-    return jnp.zeros((cap,), values.dtype).at[gid].add(values, mode="drop")
+    # dispatch-routed (DESIGN.md §5): MXU one-hot matmul kernel when the
+    # policy allows and cap fits a VMEM block, XLA scatter-add otherwise.
+    return dispatch.segment_sum(values, gid, cap)
 
 
 def aggregate(view: SegmentView, gid: jax.Array, specs, num_groups_cap: int):
@@ -239,11 +288,14 @@ def groupby_aggregate(
     specs: Sequence[Tuple[str, str, Optional[str]]],
     num_groups_cap: int,
     mask=None,
+    key_domains: Optional[Dict[str, Tuple[int, int]]] = None,
 ) -> GroupByResult:
     """End-to-end §7: align -> group -> aggregate.
 
     ``cols`` must contain every group and aggregate column. ``specs`` entries
     are (out_name, agg, col_name) with col_name None for COUNT.
+    ``key_domains`` (name -> (lo, size), from ``Table.domains``) enables
+    the sort-free grouping path — see ``grouping``.
 
     **Hybrid path** (the paper's §7/A.2 flow): when every GROUP column is
     position-explicit but some AGGREGATE columns are Plain, grouping runs at
@@ -259,14 +311,16 @@ def groupby_aggregate(
 
     if not hybrid:
         view = align_columns(dict(cols), mask=mask)
-        gid, num_groups, rep = grouping(view, group_names, num_groups_cap)
+        gid, num_groups, rep = grouping(view, group_names, num_groups_cap,
+                                        key_domains=key_domains)
         out = aggregate(view, gid, [(o, a, c) for o, a, c in specs],
                         num_groups_cap)
     else:
         from repro.core.encodings import _run_id_per_row, decode_rle_coverage
         nrows = next(iter(cols.values())).nrows
         view = align_columns(pe, mask=mask)  # run-level segments
-        gid, num_groups, rep = grouping(view, group_names, num_groups_cap)
+        gid, num_groups, rep = grouping(view, group_names, num_groups_cap,
+                                        key_domains=key_domains)
         run_specs = [(o, a, c) for o, a, c in specs
                      if c is None or c in view.values]
         out = aggregate(view, gid, run_specs, num_groups_cap)
@@ -282,8 +336,7 @@ def groupby_aggregate(
                 continue
             v = decode_column(plain[c]).astype(f32)
             if a in ("sum", "avg", "var", "std"):
-                ssum = jnp.zeros((num_groups_cap,), f32).at[gid_row].add(
-                    jnp.where(cov, v, 0.0), mode="drop")
+                ssum = _segsum(jnp.where(cov, v, 0.0), gid_row, num_groups_cap)
             if a == "sum":
                 out[o] = ssum
             elif a == "min":
@@ -296,14 +349,14 @@ def groupby_aggregate(
                     jnp.where(cov, v, -jnp.inf), mode="drop")
             elif a in ("avg", "var", "std"):
                 if counts is None:
-                    counts = jnp.zeros((num_groups_cap,), f32).at[gid].add(
-                        view.lengths.astype(f32), mode="drop")
+                    counts = _segsum(view.lengths.astype(f32), gid,
+                                     num_groups_cap)
                 mean = ssum / jnp.maximum(counts, 1)
                 if a == "avg":
                     out[o] = mean
                 else:
-                    sq = jnp.zeros((num_groups_cap,), f32).at[gid_row].add(
-                        jnp.where(cov, v * v, 0.0), mode="drop")
+                    sq = _segsum(jnp.where(cov, v * v, 0.0), gid_row,
+                                 num_groups_cap)
                     var = sq / jnp.maximum(counts, 1) - mean ** 2
                     out[o] = var if a == "var" else jnp.sqrt(
                         jnp.maximum(var, 0))

@@ -97,10 +97,20 @@ class PartitionedTable:
     """
 
     def __init__(self, partitions: List[Partition],
-                 dictionaries: Dict[str, np.ndarray], nrows: int):
+                 dictionaries: Dict[str, np.ndarray], nrows: int,
+                 domains: Optional[Dict[str, tuple]] = None,
+                 col_dtypes: Optional[Dict[str, np.dtype]] = None):
         self.partitions = partitions
         self.dictionaries = dictionaries
         self.nrows = nrows
+        # GLOBAL (cross-partition) value domains: the jitted program is
+        # shared by every partition, so any (lo, size) constants baked into
+        # it must hold for all of them (dictionary code spaces are global
+        # by construction; integer domains aggregate over the full ingest).
+        self.domains = domains or {}
+        # ingest dtypes (post-dictionary, post-float64-narrowing): the
+        # partial-merge identity elements derive from these (plan.py).
+        self.col_dtypes = col_dtypes or {}
 
     @classmethod
     def from_arrays(
@@ -128,6 +138,12 @@ class PartitionedTable:
         data = {k: v.astype(np.float32) if v.dtype == np.float64 else v
                 for k, v in data.items()}
         n = len(next(iter(data.values()))) if data else 0
+        domains = {}
+        for name, arr in data.items():
+            dom = compress.column_domain(arr, dicts.get(name))
+            if dom is not None:
+                domains[name] = dom
+        col_dtypes = {name: np.asarray(arr).dtype for name, arr in data.items()}
         offsets = _partition_offsets(n, num_partitions, partition_rows,
                                      boundaries)
         if cfg.capacity_bucket is None:
@@ -153,7 +169,8 @@ class PartitionedTable:
             parts.append(Partition(table=t, rows=rows, padded_rows=padded,
                                    row_offset=start, zone_lo=zone_lo,
                                    zone_hi=zone_hi))
-        return cls(partitions=parts, dictionaries=dicts, nrows=n)
+        return cls(partitions=parts, dictionaries=dicts, nrows=n,
+                   domains=domains, col_dtypes=col_dtypes)
 
     # -- Table duck-typing for the plan layer -------------------------------
 
@@ -412,6 +429,7 @@ class PartitionedQuery(Query):
                 execute(cols, key_sets, self._base_mask(part)))
 
         if isinstance(terminal, _AggOp):
-            return plan_mod.merge_scalar_partials(partials, terminal.specs)
+            return plan_mod.merge_scalar_partials(partials, terminal.specs,
+                                                  col_dtypes=ptable.col_dtypes)
         return groupby.merge_groupby_partials(partials, list(terminal.group),
                                               terminal.specs)

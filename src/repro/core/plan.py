@@ -293,6 +293,7 @@ class Query:
         if partial:
             ops = [_decompose_op(op) for op in ops]
         table = self.table
+        key_domains = _groupby_key_domains(ops, table)
 
         def program(columns, key_sets, base_mask=None):
             mask = base_mask
@@ -312,7 +313,8 @@ class Query:
                     needed = set(op.group) | {c for _, _, c in op.specs if c}
                     sub = {k: env[k] for k in needed}
                     return groupby.groupby_aggregate(
-                        sub, op.group, op.specs, op.num_groups_cap, mask=mask)
+                        sub, op.group, op.specs, op.num_groups_cap, mask=mask,
+                        key_domains=key_domains)
                 elif isinstance(op, _AggOp):
                     needed = {c for _, _, c in op.specs if c}
                     out = {}
@@ -365,6 +367,25 @@ class Query:
                     keys, np.full((1,), _sentinel_for(keys.dtype), keys.dtype)]))
                 key_sets.append((arr, jnp.asarray(len(keys), jnp.int32)))
         return key_sets
+
+
+def _groupby_key_domains(ops, table):
+    """Bounded-domain metadata (name -> (lo, size)) for the terminal
+    group-by's key columns, from ``table.domains`` (ingest-recorded).
+
+    Walked in pipeline order, like zone maps in partition_can_match: a
+    ``map`` rebinding a column name invalidates its domain for the
+    group-by (the recorded bounds describe the ORIGINAL values, and a
+    stale domain would silently drop out-of-range groups on the sort-free
+    path)."""
+    live = dict(getattr(table, "domains", None) or {})
+    for op in ops:
+        if isinstance(op, _MapOp):
+            live.pop(op.out, None)
+        elif isinstance(op, _GroupByOp):
+            doms = {g: live[g] for g in op.group if g in live}
+            return doms or None
+    return None
 
 
 # ----------------------- partial-aggregate decomposition -------------------
@@ -437,23 +458,43 @@ def _apply_finalize(partials: Dict[str, np.ndarray], finalize):
     return out
 
 
+def _identity_partial(agg: str, col: Optional[str], col_dtypes):
+    """Identity element for an aggregate whose every partition was skipped.
+
+    The identity dtype derives from the COLUMN's ingest dtype (falling
+    back to float32 for unknown columns): an integer SUM/MIN/MAX must not
+    silently demote to float32 just because no partition survived pruning.
+    """
+    if agg == "count":
+        return np.int64(0)
+    dt = (col_dtypes or {}).get(col)
+    if dt is not None and np.issubdtype(np.dtype(dt), np.integer):
+        if agg == "sum":
+            return np.int64(0)
+        return (np.iinfo(np.int64).max if agg == "min"
+                else np.iinfo(np.int64).min)
+    return (np.float32(0) if agg == "sum"
+            else np.float32(np.inf) if agg == "min"
+            else np.float32(-np.inf))
+
+
 def merge_scalar_partials(partials: Sequence[Dict[str, object]],
-                          specs: Sequence[Tuple[str, str, Optional[str]]]):
+                          specs: Sequence[Tuple[str, str, Optional[str]]],
+                          col_dtypes: Optional[Dict[str, np.dtype]] = None):
     """Merge per-partition scalar-aggregate partials (host side).
 
     ``partials`` are outputs of a ``build(partial=True)`` program for an
     _AggOp terminal; ``specs`` are the ORIGINAL (pre-decomposition) specs.
-    Skipped/empty partitions simply contribute no entry.
+    Skipped/empty partitions simply contribute no entry; an aggregate with
+    NO surviving partition gets an identity element whose dtype derives
+    from ``col_dtypes`` (the column's ingest dtype).
     """
     partial_specs, finalize = decompose_specs(specs)
     merged = {}
-    for o, agg, _ in partial_specs:
+    for o, agg, c in partial_specs:
         vals = [np.asarray(p[o]) for p in partials]
         if not vals:
-            merged[o] = (np.int32(0) if agg == "count"
-                         else np.float32(0) if agg == "sum"
-                         else np.float32(np.inf) if agg == "min"
-                         else np.float32(-np.inf))
+            merged[o] = _identity_partial(agg, c, col_dtypes)
             continue
         acc = vals[0]
         for v in vals[1:]:

@@ -13,7 +13,7 @@ static-shape under the capacity model (DESIGN.md §3):
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +27,7 @@ from repro.core.encodings import (
     pad_positions,
     valid_slots,
 )
+from repro.kernels import dispatch
 
 # ---------------------------------------------------------------------------
 # Building blocks
@@ -59,7 +60,7 @@ def repeat_interleave_capped(repeats: jax.Array, cap: int) -> Tuple[jax.Array, j
     offsets = jnp.cumsum(repeats)  # inclusive prefix sums
     total = offsets[-1] if repeats.shape[0] > 0 else jnp.asarray(0, repeats.dtype)
     i = jnp.arange(cap, dtype=offsets.dtype)
-    src = jnp.searchsorted(offsets, i, side="right").astype(POS_DTYPE)
+    src = dispatch.bucketize(offsets, i, right=True).astype(POS_DTYPE)
     valid = i < total
     src = jnp.where(valid, src, 0)
     return src, valid, total.astype(jnp.int32)
@@ -101,6 +102,37 @@ def unique_with_inverse(values: jax.Array, valid: jax.Array, cap_groups: int):
     return uniques, inverse.astype(POS_DTYPE), num_groups
 
 
+def unique_bounded(values: jax.Array, valid: jax.Array, domain_size: int,
+                   cap_groups: int | None = None):
+    """Sort-free unique+inverse for values in the dense domain [0, domain_size).
+
+    The torch.unique/argsort in ``unique_with_inverse`` is the expensive
+    part of every grouping (paper §7); when the key is a dictionary code or
+    a centered narrow integer its domain is a small dense range known at
+    ingest, and unique reduces to a presence scatter + cumsum renumbering —
+    O(n + domain) work, no O(n log n) sort (grouping directly on codes, the
+    Lin et al. companion-work trick).
+
+    ``valid`` masks slots out; out-of-domain values are dropped (callers
+    guarantee in-domain via the ingest domain metadata, DESIGN.md §5).
+    Returns (uniques[cap_groups or domain_size] — the present domain values
+    ascending, inverse[len(values)], num_groups). Group ids are assigned in
+    ascending value order, exactly matching ``unique_with_inverse``.
+    """
+    cap_groups = domain_size if cap_groups is None else cap_groups
+    v = jnp.where(valid, values.astype(jnp.int32), domain_size)
+    counts = jnp.zeros((domain_size,), jnp.int32).at[v].add(1, mode="drop")
+    present = counts > 0
+    rank = (jnp.cumsum(present) - 1).astype(POS_DTYPE)
+    num_groups = jnp.sum(present).astype(jnp.int32)
+    inverse = rank[jnp.clip(v, 0, domain_size - 1)]
+    inverse = jnp.where(valid, inverse, 0).astype(POS_DTYPE)
+    (uniques,), _ = compact(present,
+                            (jnp.arange(domain_size, dtype=jnp.int32),),
+                            cap_groups, (0,))
+    return uniques, inverse, num_groups
+
+
 # ---------------------------------------------------------------------------
 # range_intersect (Algorithm 1) — the workhorse
 # ---------------------------------------------------------------------------
@@ -121,8 +153,8 @@ def range_intersect(
     """
     cap1 = s1.shape[0]
     # Step 1/2: bucketize starts & ends (paper lines 1-2).
-    bin_s = jnp.searchsorted(e2, s1, side="left")  # right=False
-    bin_e = jnp.searchsorted(s2, e1, side="right")  # right=True
+    bin_s = dispatch.bucketize(e2, s1, right=False)
+    bin_e = dispatch.bucketize(s2, e1, right=True)
     # Step 3: overlap counts; zero for invalid input slots. Valid runs of c1
     # never see sentinel slots of c2 (sentinel start == nrows > any valid end),
     # but invalid runs of c1 would count c2's sentinel region -> mask them.
@@ -155,6 +187,63 @@ def range_intersect_masks(m1: RLEMask, m2: RLEMask, cap_out: int | None = None) 
     return RLEMask(starts=s, ends=e, n=n, nrows=m1.nrows)
 
 
+def range_intersect_multi(lists: Sequence[tuple], nrows: int, cap_out: int):
+    """Intersect k sorted non-overlapping run lists in ONE fused sweep.
+
+    Replaces k-1 chained pairwise ``range_intersect`` calls (whose
+    intermediate capacities grow additively and whose bucketize work
+    repeats at every stage) with a single coverage sweep: concatenate all
+    run boundary events, sort once, and emit maximal intervals where the
+    coverage count equals k.
+
+    End events sort BEFORE start events at equal positions, so two
+    adjacent runs of one list (a value change at row p) always produce a
+    segment boundary — exactly matching the pairwise chain, which splits
+    output runs at every source-run boundary. Alignment (§6) depends on
+    this: segments must never span a run whose value changes.
+
+    ``lists``: sequence of (starts, ends, n) with the sentinel invariant.
+    Returns (s[cap_out], e[cap_out], idxs, n_out) where idxs[j][i] is the
+    source run of list j covering output run i (0 where invalid).
+    """
+    k = len(lists)
+    caps = [s.shape[0] for s, _, _ in lists]
+    valids = [valid_slots(n, cap) for (_, _, n), cap in zip(lists, caps)]
+    sentinel_pos = jnp.asarray(nrows + 1, POS_DTYPE)
+    # end events first in the concat => stable argsort keeps them before
+    # start events at equal positions (run boundaries split, never merge).
+    pos = jnp.concatenate(
+        [e + 1 for _, e, _ in lists] + [s for s, _, _ in lists]
+    ).astype(POS_DTYPE)
+    delta = jnp.concatenate(
+        [jnp.where(v, -1, 0) for v in valids]
+        + [jnp.where(v, 1, 0) for v in valids])
+    pos = jnp.where(delta == 0, sentinel_pos, pos)
+    order = jnp.argsort(pos, stable=True)
+    pos_s, delta_s = pos[order], delta[order]
+    cov = jnp.cumsum(delta_s)
+    prev_cov = jnp.concatenate([jnp.zeros((1,), cov.dtype), cov[:-1]])
+    # cov touches k only when every list covers; with ends-first ordering a
+    # region opened at position p cannot close before p+1, so the i-th
+    # start always pairs with the i-th end and no degenerate runs arise.
+    start_flag = (cov == k) & (prev_cov < k) & (delta_s != 0)
+    end_flag = (cov < k) & (prev_cov == k) & (delta_s != 0)
+    (starts_out,), n_out = compact(start_flag, (pos_s,), cap_out, (nrows,))
+    (ends_out,), _ = compact(end_flag, (pos_s - 1,), cap_out, (nrows,))
+    valid = valid_slots(n_out, cap_out)
+    sentinel = jnp.asarray(nrows, POS_DTYPE)
+    s_out = jnp.where(valid, starts_out, sentinel).astype(POS_DTYPE)
+    e_out = jnp.where(valid, ends_out, sentinel).astype(POS_DTYPE)
+    # source run per output run and list: the run containing s_out.
+    idxs = []
+    for (s_j, _, n_j), cap_j in zip(lists, caps):
+        sp = pad_positions(s_j, n_j, nrows)
+        b = dispatch.bucketize(sp, s_out, right=True) - 1
+        b = jnp.clip(b, 0, cap_j - 1)
+        idxs.append(jnp.where(valid, b, 0).astype(POS_DTYPE))
+    return s_out, e_out, idxs, n_out
+
+
 # ---------------------------------------------------------------------------
 # range_union (paper §5.2, RLE OR RLE) — vectorized sweep line
 # ---------------------------------------------------------------------------
@@ -167,8 +256,14 @@ def range_union(
 ):
     """Union of two sorted run lists. Returns (s, e, n_out).
 
-    Sweep line over +1/-1 coverage deltas at run starts / (ends+1); +1 events
-    sort before -1 events at equal positions so adjacent runs merge maximally.
+    Sweep line over +1/-1 coverage deltas at run starts / (ends+1). Start
+    events must land before end events at equal positions so adjacent runs
+    merge maximally; that ordering comes from the concat layout (starts
+    first) + a STABLE argsort on the position alone. (The previous
+    ``pos * 2 + (delta < 0)`` composite key overflowed int32 for tables
+    past 2^30 rows — sentinel positions sorted to the front and the union
+    collapsed; positions stay un-doubled now, so any nrows <= 2^31 - 2 is
+    safe.)
     """
     cap1, cap2 = s1.shape[0], s2.shape[0]
     v1, v2 = valid_slots(n1, cap1), valid_slots(n2, cap2)
@@ -177,10 +272,9 @@ def range_union(
         jnp.where(v1, 1, 0), jnp.where(v2, 1, 0),
         jnp.where(v1, -1, 0), jnp.where(v2, -1, 0),
     ])
-    # sentinel events (invalid slots) -> +inf-ish position with delta 0
-    pos = jnp.where(delta == 0, jnp.asarray(2 * nrows + 4, jnp.int32), pos)
-    key = pos.astype(jnp.int32) * 2 + (delta < 0)
-    order = jnp.argsort(key)
+    # sentinel events (invalid slots) -> past-the-end position with delta 0
+    pos = jnp.where(delta == 0, jnp.asarray(nrows + 1, jnp.int32), pos)
+    order = jnp.argsort(pos, stable=True)
     pos_s, delta_s = pos[order], delta[order]
     cov = jnp.cumsum(delta_s)
     prev_cov = jnp.concatenate([jnp.zeros((1,), cov.dtype), cov[:-1]])
@@ -188,8 +282,8 @@ def range_union(
     # the event where it returns to 0 (end position = event position - 1).
     start_flag = (cov > 0) & (prev_cov == 0) & (delta_s != 0)
     end_flag = (cov == 0) & (prev_cov > 0) & (delta_s != 0)
-    (starts_out,), n_a = compact(start_flag, (pos_s,), cap_out, (2 * nrows + 4,))
-    (ends_out,), n_b = compact(end_flag, (pos_s - 1,), cap_out, (2 * nrows + 3,))
+    (starts_out,), n_a = compact(start_flag, (pos_s,), cap_out, (nrows,))
+    (ends_out,), n_b = compact(end_flag, (pos_s - 1,), cap_out, (nrows,))
     n_out = n_a  # == n_b by construction
     sentinel = jnp.asarray(nrows, POS_DTYPE)
     valid = valid_slots(n_out, cap_out)
@@ -213,7 +307,7 @@ def idx_in_rle_mask(
     inside some RLE run; run_id[i] is that run (0 where invalid).
     """
     cap_idx = pos.shape[0]
-    bin_ = jnp.searchsorted(rs, pos, side="right") - 1  # right=True, then -1
+    bin_ = dispatch.bucketize(rs, pos, right=True) - 1
     ok = (bin_ >= 0) & (bin_ < n_rle)
     bin_c = jnp.clip(bin_, 0, rs.shape[0] - 1)
     mask = ok & (pos <= re[bin_c]) & valid_slots(n_idx, cap_idx)
@@ -237,8 +331,8 @@ def rle_contain_idx(c_idx_pos, n_idx, rs, re, n_rle, nrows: int, cap_out: int):
     (pos_out, run_out, src_out, n_out) matching idx_in_rle's contract.
     """
     cap_rle = rs.shape[0]
-    bin_s = jnp.searchsorted(c_idx_pos, rs, side="left")
-    bin_e = jnp.searchsorted(c_idx_pos, re, side="right") - 1
+    bin_s = dispatch.bucketize(c_idx_pos, rs, right=False)
+    bin_e = dispatch.bucketize(c_idx_pos, re, right=True) - 1
     ok = (bin_s <= bin_e) & valid_slots(n_rle, cap_rle)
     # clamp to the valid region of the index list
     bin_e = jnp.minimum(bin_e, n_idx - 1)
@@ -256,7 +350,7 @@ def idx_in_idx(p1, n1, p2, n2, nrows: int, cap_out: int):
     Returns (pos_out, src1_out, src2_out, n_out).
     """
     cap1 = p1.shape[0]
-    bin_ = jnp.searchsorted(p2, p1, side="right") - 1
+    bin_ = dispatch.bucketize(p2, p1, right=True) - 1
     ok = (bin_ >= 0) & (bin_ < n2) & valid_slots(n1, cap1)
     bin_c = jnp.clip(bin_, 0, p2.shape[0] - 1)
     mask = ok & (p1 == p2[bin_c])
@@ -351,12 +445,18 @@ def rle_to_index(values, rs, re, n, nrows: int, cap_out: int):
 
 
 def rle_to_plain(values, rs, re, n, nrows: int, fill=0):
-    """Expand RLE to a dense [nrows] array (O(n) scatter+cumsum sweep —
-    see encodings._run_id_per_row for why not binary search per row)."""
+    """Expand RLE to a dense [nrows] array.
+
+    Dispatch-routed (DESIGN.md §5): the Pallas ``rle_decode`` kernel when
+    the policy picks it, otherwise the O(n) scatter+cumsum sweep (see
+    encodings._run_id_per_row for why not binary search per row)."""
     from repro.core.encodings import _run_id_per_row, decode_rle_coverage
-    covered = decode_rle_coverage(rs, re, n, nrows)
     if values is None:
-        return covered
+        return decode_rle_coverage(rs, re, n, nrows)
+    routed = dispatch.maybe_rle_decode(values, rs, re, n, nrows, fill)
+    if routed is not None:
+        return routed
+    covered = decode_rle_coverage(rs, re, n, nrows)
     run = jnp.clip(_run_id_per_row(rs, n, nrows), 0, rs.shape[0] - 1)
     return jnp.where(covered, values[run], jnp.asarray(fill, values.dtype))
 

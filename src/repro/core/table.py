@@ -7,7 +7,7 @@ host), as in TQP (§2.1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -46,6 +46,10 @@ class Table:
     columns: Dict[str, object]
     nrows: int
     dictionaries: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    # per-column dense value domain (lo, size) recorded at ingest for
+    # integer/dictionary columns — the sort-free grouping contract
+    # (DESIGN.md §5): every value a query can observe lies in the domain.
+    domains: Dict[str, Tuple[int, int]] = dataclasses.field(default_factory=dict)
 
     @classmethod
     def from_arrays(
@@ -66,13 +70,18 @@ class Table:
         else:
             dicts = dictionaries
         cols = {}
+        domains = {}
         nrows = None
         for name, arr in data.items():
             arr = np.asarray(arr)
             nrows = len(arr) if nrows is None else nrows
             enc = (encodings or {}).get(name)
             cols[name] = compress.encode(arr, cfg, encoding=enc)
-        return cls(columns=cols, nrows=nrows or 0, dictionaries=dicts)
+            dom = compress.column_domain(arr, dicts.get(name))
+            if dom is not None:
+                domains[name] = dom
+        return cls(columns=cols, nrows=nrows or 0, dictionaries=dicts,
+                   domains=domains)
 
     def column(self, name: str):
         return self.columns[name]

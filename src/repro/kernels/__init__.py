@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernels for the engine's dominant primitives, with pure-jnp
+# oracles (ref.py) and an encoding-aware dispatch policy (dispatch.py)
+# that routes query-pipeline call sites between the kernels and the XLA
+# formulations at trace time. ops.py is the explicit-choice jit'd API.
+from repro.kernels import dispatch, ops, ref  # noqa: F401

@@ -1,0 +1,206 @@
+"""Encoding-aware kernel dispatch policy (DESIGN.md §5).
+
+The query engine's three dominant primitives — ``bucketize`` (binary
+search, the core of every §4 range algorithm), ``rle_decode`` (run
+expansion) and ``segment_sum`` (group-by scatter-reduce) — each have a
+Pallas TPU kernel in this package and a pure-XLA formulation. This module
+is the single place that decides, AT TRACE TIME, which implementation a
+call site gets, so the decision composes with ``jax.jit`` (the routing is
+host-side Python over static shapes; no retracing beyond the usual shape
+keys).
+
+Policy resolution, in order:
+
+  1. an explicit ``overrides(...)`` / ``set_policy(...)`` (tests, benches),
+  2. environment variables at import (``REPRO_USE_PALLAS`` = ``1``/``0``/
+     ``auto``, ``REPRO_SORT_FREE``, ``REPRO_SORT_FREE_MAX_DOMAIN``,
+     ``REPRO_BUCKETIZE_MIN_QUERIES``, ``REPRO_RLE_DECODE_MIN_ROWS``,
+     ``REPRO_SEGSUM_MAX_GROUPS``),
+  3. defaults: Pallas on TPU backends only (interpret mode elsewhere is a
+     correctness harness, not a fast path), size thresholds below which
+     the fused XLA op wins regardless of backend.
+
+The sort-free grouping knobs live here too (``enable_sort_free``,
+``sort_free_max_domain``): scatter-grouping over a bounded code domain is
+the same class of decision — pick the implementation the encoding
+metadata proves safe and the size model says is profitable.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bucketize import (
+    MAX_VMEM_BOUNDARIES,
+    bucketize_count_kernel,
+    bucketize_kernel,
+)
+from repro.kernels.rle_decode import rle_decode_kernel
+from repro.kernels.segment_reduce import segment_sum_kernel
+
+# dtypes the 1-D kernels handle natively (4-byte words; narrower dtypes
+# keep the XLA path — their TPU tile shapes differ and the engine only
+# ever decodes int32/float32 value tensors on the hot path)
+_KERNEL_DTYPES = (jnp.int32, jnp.float32)
+
+MAX_MATMUL_SEGMENTS = 4096  # one-hot matmul: G must fit a VMEM block
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPolicy:
+    """Backend + size-threshold routing policy. All fields host-static."""
+
+    use_pallas: Optional[bool] = None  # None = auto: TPU backends only
+    interpret: Optional[bool] = None  # None = auto: interpret off-TPU
+    # bucketize: below this many queries the XLA searchsorted is cheaper
+    # than staging boundaries into VMEM.
+    bucketize_min_queries: int = 4096
+    bucketize_max_vmem_boundaries: int = MAX_VMEM_BOUNDARIES
+    # rle_decode: tiny columns are latency-bound; keep the fused XLA sweep.
+    rle_decode_min_rows: int = 4096
+    # segment_sum: the one-hot matmul needs the (G,) accumulator and a
+    # (TILE, G) one-hot resident in VMEM.
+    segment_sum_max_groups: int = MAX_MATMUL_SEGMENTS
+    # sort-free grouping (groupby.grouping): scatter over the mixed-radix
+    # key domain instead of argsort-unique, when every group key has
+    # ingest-recorded domain metadata and the product domain fits.
+    enable_sort_free: bool = True
+    sort_free_max_domain: int = 1 << 20
+
+    def pallas_enabled(self) -> bool:
+        if self.use_pallas is not None:
+            return self.use_pallas
+        return jax.default_backend() == "tpu"
+
+    def interpret_mode(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+
+def _env_tristate(env, name: str) -> Optional[bool]:
+    raw = env.get(name, "auto").strip().lower()
+    if raw in ("1", "true", "yes", "on"):
+        return True
+    if raw in ("0", "false", "no", "off"):
+        return False
+    return None  # auto
+
+
+def _env_int(env, name: str, default: int) -> int:
+    raw = env.get(name)
+    if raw is None:
+        return default
+    return int(raw)
+
+
+def policy_from_env(env=None) -> DispatchPolicy:
+    """Build a policy from environment variables (see module docstring)."""
+    env = os.environ if env is None else env
+    base = DispatchPolicy()
+    sort_free = _env_tristate(env, "REPRO_SORT_FREE")
+    return DispatchPolicy(
+        use_pallas=_env_tristate(env, "REPRO_USE_PALLAS"),
+        interpret=_env_tristate(env, "REPRO_PALLAS_INTERPRET"),
+        bucketize_min_queries=_env_int(
+            env, "REPRO_BUCKETIZE_MIN_QUERIES", base.bucketize_min_queries),
+        bucketize_max_vmem_boundaries=_env_int(
+            env, "REPRO_BUCKETIZE_MAX_VMEM_BOUNDARIES",
+            base.bucketize_max_vmem_boundaries),
+        rle_decode_min_rows=_env_int(
+            env, "REPRO_RLE_DECODE_MIN_ROWS", base.rle_decode_min_rows),
+        segment_sum_max_groups=_env_int(
+            env, "REPRO_SEGSUM_MAX_GROUPS", base.segment_sum_max_groups),
+        enable_sort_free=True if sort_free is None else sort_free,
+        sort_free_max_domain=_env_int(
+            env, "REPRO_SORT_FREE_MAX_DOMAIN", base.sort_free_max_domain),
+    )
+
+
+_POLICY: DispatchPolicy = policy_from_env()
+
+
+def policy() -> DispatchPolicy:
+    return _POLICY
+
+
+def set_policy(p: DispatchPolicy) -> None:
+    global _POLICY
+    _POLICY = p
+
+
+@contextlib.contextmanager
+def overrides(**kw):
+    """Temporarily replace policy fields (tests / benchmarks)."""
+    old = _POLICY
+    set_policy(dataclasses.replace(old, **kw))
+    try:
+        yield _POLICY
+    finally:
+        set_policy(old)
+
+
+# ---------------------------------------------------------------------------
+# Routed primitives. Callable from inside jitted programs: the routing
+# decision is static, the chosen implementation traces inline.
+# ---------------------------------------------------------------------------
+
+
+def _kernel_ok(*arrays) -> bool:
+    return all(a.dtype in _KERNEL_DTYPES for a in arrays)
+
+
+def bucketize(boundaries: jax.Array, queries: jax.Array,
+              right: bool = True) -> jax.Array:
+    """torch.bucketize == searchsorted (right=True -> side='right')."""
+    pol = policy()
+    n_b, n_q = boundaries.shape[0], queries.shape[0]
+    if (pol.pallas_enabled() and n_b > 0
+            and n_q >= pol.bucketize_min_queries
+            and _kernel_ok(boundaries, queries)):
+        interp = pol.interpret_mode()
+        if n_b <= pol.bucketize_max_vmem_boundaries:
+            return bucketize_kernel(boundaries, queries, right,
+                                    interpret=interp)
+        return bucketize_count_kernel(boundaries, queries, right,
+                                      interpret=interp)
+    side = "right" if right else "left"
+    return jnp.searchsorted(boundaries, queries, side=side).astype(jnp.int32)
+
+
+def maybe_rle_decode(values, starts, ends, n, nrows: int, fill=0):
+    """Kernel-decoded dense [nrows] array, or None when the policy routes
+    to the caller's XLA formulation (the O(n) scatter+cumsum sweep in
+    ``encodings.decode_rle_values`` — the call site owns its fallback
+    because it is already the tuned XLA implementation)."""
+    pol = policy()
+    if (pol.pallas_enabled() and nrows >= pol.rle_decode_min_rows
+            and starts.shape[0] > 0 and _kernel_ok(values, starts, ends)):
+        return rle_decode_kernel(values, starts, ends,
+                                 jnp.asarray(n, jnp.int32), nrows, fill,
+                                 interpret=pol.interpret_mode())
+    return None
+
+
+def segment_sum(values: jax.Array, segment_ids: jax.Array,
+                num_segments: int) -> jax.Array:
+    """Segment sum; out-of-range ids (capacity padding) contribute 0.
+
+    MXU one-hot matmul when the policy allows and the group count fits a
+    VMEM block; XLA scatter-add otherwise. Only float32 routes to the
+    kernel (its accumulator is float32; integer callers — COUNT — keep
+    exact scatter arithmetic).
+    """
+    pol = policy()
+    if (pol.pallas_enabled() and values.dtype == jnp.float32
+            and 0 < num_segments <= pol.segment_sum_max_groups
+            and values.shape[0] > 0):
+        return segment_sum_kernel(values, segment_ids, num_segments,
+                                  interpret=pol.interpret_mode())
+    return jnp.zeros((num_segments,), values.dtype).at[segment_ids].add(
+        values, mode="drop")

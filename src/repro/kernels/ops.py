@@ -2,9 +2,16 @@
 
 On this CPU container the kernels run in interpret mode (``interpret=True``
 executes the kernel body in Python for correctness validation); on TPU they
-compile natively. ``use_pallas=False`` (the default for the XLA-fused query
-pipelines) routes to the pure-jnp reference implementations so the engine
-works on any backend — the kernels are the TPU hot-path option.
+compile natively. ``use_pallas=False`` routes to the pure-jnp reference
+implementations so the wrappers work on any backend.
+
+These wrappers are the *explicit-choice* API (tests, microbenches). The
+query pipeline itself routes through ``repro.kernels.dispatch``, which
+makes the backend/size decision automatically at trace time.
+
+Degenerate shapes (empty boundaries / queries / values, zero rows or
+segments) always take the reference path: the kernels assume at least one
+grid step and a non-empty resident block.
 """
 from __future__ import annotations
 
@@ -19,10 +26,9 @@ from repro.kernels.bucketize import (
     bucketize_count_kernel,
     bucketize_kernel,
 )
+from repro.kernels.dispatch import MAX_MATMUL_SEGMENTS
 from repro.kernels.rle_decode import rle_decode_kernel
 from repro.kernels.segment_reduce import segment_sum_kernel
-
-MAX_MATMUL_SEGMENTS = 4096
 
 
 def default_interpret() -> bool:
@@ -33,7 +39,8 @@ def default_interpret() -> bool:
 @partial(jax.jit, static_argnames=("right", "use_pallas", "interpret"))
 def bucketize(boundaries, queries, right: bool = True, use_pallas: bool = False,
               interpret: bool | None = None):
-    if not use_pallas:
+    if (not use_pallas or boundaries.shape[0] == 0
+            or queries.shape[0] == 0):
         return ref.ref_bucketize(boundaries, queries, right)
     interp = default_interpret() if interpret is None else interpret
     if boundaries.shape[0] <= MAX_VMEM_BOUNDARIES:
@@ -44,6 +51,10 @@ def bucketize(boundaries, queries, right: bool = True, use_pallas: bool = False,
 @partial(jax.jit, static_argnames=("nrows", "fill", "use_pallas", "interpret"))
 def rle_decode(values, starts, ends, n, nrows: int, fill=0,
                use_pallas: bool = False, interpret: bool | None = None):
+    if nrows == 0:
+        return jnp.zeros((0,), values.dtype)
+    if values.shape[0] == 0:  # no run capacity at all: every row is a gap
+        return jnp.full((nrows,), fill, values.dtype)
     if not use_pallas:
         return ref.ref_rle_decode(values, starts, ends, n, nrows, fill)
     interp = default_interpret() if interpret is None else interpret
@@ -53,7 +64,8 @@ def rle_decode(values, starts, ends, n, nrows: int, fill=0,
 @partial(jax.jit, static_argnames=("num_segments", "reduce", "use_pallas", "interpret"))
 def segment_reduce(values, segment_ids, num_segments: int, reduce: str = "sum",
                    use_pallas: bool = False, interpret: bool | None = None):
-    if not use_pallas or reduce != "sum" or num_segments > MAX_MATMUL_SEGMENTS:
+    if (not use_pallas or reduce != "sum" or num_segments > MAX_MATMUL_SEGMENTS
+            or num_segments == 0 or values.shape[0] == 0):
         return ref.ref_segment_reduce(values, segment_ids, num_segments, reduce)
     interp = default_interpret() if interpret is None else interpret
     return segment_sum_kernel(values.astype(jnp.float32), segment_ids,

@@ -78,6 +78,42 @@ def test_groupby_with_mask(menc, data):
                                   want["count"])
 
 
+@pytest.mark.parametrize("kenc", ["plain", "rle"])
+@given(data=st.data())
+def test_groupby_sortfree_identical_to_argsort(kenc, data):
+    """DESIGN.md §5: the bounded-domain scatter grouping must produce a
+    GroupByResult IDENTICAL to the argsort path, for plain (row-level),
+    RLE (run-level) and hybrid (RLE key + plain aggregate) mixes."""
+    from repro.core import compress
+    n = data.draw(st.integers(10, 80))
+    keys = np.array(data.draw(
+        st.lists(st.integers(-4, 4), min_size=n, max_size=n)), np.int32)
+    if kenc == "rle":
+        keys = np.sort(keys)
+    vals = np.array(data.draw(
+        st.lists(st.integers(0, 9), min_size=n, max_size=n)), np.float32)
+    sel = np.array(data.draw(st.lists(st.booleans(), min_size=n, max_size=n)))
+    if not sel.any():
+        return
+    kc = make_rle_col(keys) if kenc == "rle" else E.make_plain(keys)
+    cols = {"k": kc, "v": E.make_plain(vals)}
+    specs = [("s", "sum", "v"), ("c", "count", None),
+             ("mn", "min", "v"), ("a", "avg", "v")]
+    mask = MASK_ENCODERS["rle"](sel)
+    doms = {"k": compress.column_domain(keys)}
+    r_fast = G.groupby_aggregate(cols, ["k"], specs, num_groups_cap=16,
+                                 mask=mask, key_domains=doms)
+    r_sort = G.groupby_aggregate(cols, ["k"], specs, num_groups_cap=16,
+                                 mask=mask)
+    assert int(r_fast.num_groups) == int(r_sort.num_groups)
+    for name in r_fast.keys:
+        np.testing.assert_array_equal(np.asarray(r_fast.keys[name]),
+                                      np.asarray(r_sort.keys[name]))
+    for name in r_fast.aggs:
+        np.testing.assert_array_equal(np.asarray(r_fast.aggs[name]),
+                                      np.asarray(r_sort.aggs[name]))
+
+
 @given(data=st.data())
 def test_groupby_rle_sum_never_expands(data):
     """§7.2 v·l rewrite: segments stay at run granularity when all inputs

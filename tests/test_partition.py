@@ -159,6 +159,33 @@ def test_empty_partitions_and_all_rows_filtered(rng):
     assert int(q3.run()["c"]) == 0
 
 
+def test_all_skipped_integer_aggregates_keep_integer_identity(rng):
+    """Identity elements for aggregates whose EVERY partition was pruned
+    derive from the column's ingest dtype — an integer SUM/MIN/MAX must
+    not silently come back as float32."""
+    n = 4000
+    data = {"k": np.sort(rng.integers(0, 50, n)).astype(np.int32),
+            "v": rng.integers(-7, 900, n).astype(np.int32),
+            "f": rng.random(n).astype(np.float32)}
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=4)
+    q = (PartitionedQuery(pt).filter(col("k") > 10_000)
+         .aggregate({"s": ("sum", "v"), "mn": ("min", "v"),
+                     "mx": ("max", "v"), "c": ("count", None),
+                     "fs": ("sum", "f")}))
+    r = q.run()
+    assert q.last_stats["executed"] == 0
+    assert np.issubdtype(np.asarray(r["s"]).dtype, np.integer)
+    assert int(r["s"]) == 0
+    assert np.issubdtype(np.asarray(r["c"]).dtype, np.integer)
+    assert int(r["c"]) == 0
+    assert np.issubdtype(np.asarray(r["mn"]).dtype, np.integer)
+    assert int(r["mn"]) == np.iinfo(np.int64).max  # true empty-min identity
+    assert np.issubdtype(np.asarray(r["mx"]).dtype, np.integer)
+    assert int(r["mx"]) == np.iinfo(np.int64).min
+    # float columns keep the float identity
+    assert np.asarray(r["fs"]).dtype == np.float32 and float(r["fs"]) == 0.0
+
+
 def test_groupby_merge_handles_disjoint_groups(rng):
     # each partition contributes a different group-key set
     k = np.repeat(np.arange(8, dtype=np.int32), 1000)

@@ -154,6 +154,101 @@ def test_unique_with_inverse(vals):
     np.testing.assert_array_equal(np.asarray(uniq)[np.asarray(inv)], a)
 
 
+def test_range_union_no_int32_overflow_near_2_31_rows():
+    """Regression: the old sort key ``pos * 2 + (delta < 0)`` wrapped int32
+    for positions past 2^30, scrambling the sweep order. Runs parked near
+    the top of the int32 row space must still union correctly."""
+    nrows = 2**31 - 8
+    m1 = E.make_rle_mask([nrows - 1000], [nrows - 500], nrows, capacity=3)
+    m2 = E.make_rle_mask([nrows - 700], [nrows - 100], nrows, capacity=3)
+    s, e, cnt = P.range_union(m1.starts, m1.ends, m1.n, m2.starts, m2.ends,
+                              m2.n, nrows, cap_out=6)
+    assert int(cnt) == 1
+    assert int(np.asarray(s)[0]) == nrows - 1000
+    assert int(np.asarray(e)[0]) == nrows - 100
+    # adjacent runs at huge positions merge maximally (starts sort first)
+    m3 = E.make_rle_mask([nrows - 400], [nrows - 301], nrows, capacity=3)
+    m4 = E.make_rle_mask([nrows - 300], [nrows - 200], nrows, capacity=3)
+    s, e, cnt = P.range_union(m3.starts, m3.ends, m3.n, m4.starts, m4.ends,
+                              m4.n, nrows, cap_out=6)
+    assert int(cnt) == 1
+    assert int(np.asarray(s)[0]) == nrows - 400
+    assert int(np.asarray(e)[0]) == nrows - 200
+
+
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=60),
+       st.lists(st.booleans(), min_size=1, max_size=60))
+def test_unique_bounded_matches_unique_with_inverse(vals, flags):
+    a = np.array(vals, np.int32)
+    valid = np.array((flags * len(a))[:len(a)])
+    if not valid.any():
+        return
+    jv = jnp.asarray(valid)
+    u1, i1, n1 = P.unique_with_inverse(jnp.asarray(a), jv, cap_groups=16)
+    u2, i2, n2 = P.unique_bounded(jnp.asarray(a), jv, domain_size=10,
+                                  cap_groups=16)
+    k = int(n1)
+    assert k == int(n2) == len(np.unique(a[valid]))
+    np.testing.assert_array_equal(np.asarray(u1)[:k], np.asarray(u2)[:k])
+    # identical group ids on valid slots (both paths rank ascending)
+    np.testing.assert_array_equal(np.asarray(i1)[valid], np.asarray(i2)[valid])
+
+
+@given(st.data())
+def test_range_intersect_multi_coverage_and_sources(data):
+    k = data.draw(st.integers(1, 4))
+    n = data.draw(st.integers(5, 50))
+    denses = [np.array(data.draw(
+        st.lists(st.booleans(), min_size=n, max_size=n))) for _ in range(k)]
+    masks = [make_rle_mask(d) for d in denses]
+    cap = sum(m.capacity for m in masks)
+    s, e, idxs, cnt = P.range_intersect_multi(
+        [(m.starts, m.ends, m.n) for m in masks], n, cap)
+    got = np.asarray(E.decode_rle_coverage(s, e, cnt, n))
+    np.testing.assert_array_equal(got, np.logical_and.reduce(denses))
+    # every output run lies inside its reported source run of every list
+    for j, m in enumerate(masks):
+        sj, ej = np.asarray(m.starts), np.asarray(m.ends)
+        for i in range(int(cnt)):
+            r = int(np.asarray(idxs[j])[i])
+            assert sj[r] <= int(np.asarray(s)[i])
+            assert int(np.asarray(e)[i]) <= ej[r]
+
+
+@given(st.data())
+def test_range_intersect_multi_preserves_run_boundaries(data):
+    """Alignment contract: output segments never span a source-run boundary
+    (adjacent equal-coverage runs whose VALUES differ must stay split)."""
+    k = data.draw(st.integers(1, 3))
+    n = data.draw(st.integers(4, 40))
+    cols = []
+    for _ in range(k):
+        vals = np.array(data.draw(
+            st.lists(st.integers(0, 2), min_size=n, max_size=n)), np.int32)
+        cols.append(vals)
+    from conftest import make_rle_col
+    rles = [make_rle_col(v) for v in cols]
+    cap = sum(c.capacity for c in rles)
+    s, e, idxs, cnt = P.range_intersect_multi(
+        [(c.starts, c.ends, c.n) for c in rles], n, cap)
+    # full-coverage columns: the fused sweep must reproduce the exact
+    # blocked segmentation at the union of all run boundaries
+    change = np.zeros(n, bool)
+    change[0] = True
+    for v in cols:
+        change[1:] |= v[1:] != v[:-1]
+    want_starts = np.flatnonzero(change)
+    want_ends = np.concatenate([want_starts[1:] - 1, [n - 1]])
+    kcnt = int(cnt)
+    assert kcnt == len(want_starts)
+    np.testing.assert_array_equal(np.asarray(s)[:kcnt], want_starts)
+    np.testing.assert_array_equal(np.asarray(e)[:kcnt], want_ends)
+    # per-segment gathered values match the dense columns
+    for j, v in enumerate(cols):
+        seg_vals = np.asarray(rles[j].values)[np.asarray(idxs[j])[:kcnt]]
+        np.testing.assert_array_equal(seg_vals, v[want_starts])
+
+
 @given(dense_masks())
 def test_compact_rle_removes_gaps(d):
     a = np.array(d)
