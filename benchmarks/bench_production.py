@@ -11,7 +11,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import compress
-from repro.core.plan import Query, col, pk_fk_gather
+from repro.core.plan import Query, col
 from repro.core.table import Table
 from benchmarks.common import rle_friendly, time_fn, write_csv
 
@@ -46,14 +46,20 @@ def run(n=3_000_000):
 
     dims = {"c2": 64, "c3": 256, "c4": 1000, "c5": 4000, "c8": 50,
             "c9": 200, "c10": 2000, "c11": 30, "c12": 12, "c13": 8}
-    pk_payload = (np.arange(16000, dtype=np.int32) % 97).astype(np.int32)
+    # c6 dimension (16k surrogate PKs, stored key-ordered): the Q1 shape's
+    # PK-FK join gathers a category attribute the group-by then keys on
+    dim_c6 = Table.from_arrays({
+        "c6": np.arange(16000, dtype=np.int32),
+        "d6_cat": (np.arange(16000, dtype=np.int32) % 97).astype(np.int32),
+    }, cfg=compress.CompressionConfig(plain_threshold=1000))
 
     def q1(t):
         q = Query(t)
         for cname in ("c2", "c3", "c4", "c5", "c8", "c9", "c11"):  # 7 semi-joins
             q = q.semi_join(cname, _semi_keys(rng, dims[cname], 0.5))
-        return q.groupby(["c12"], {"s": ("sum", "measure"),
-                                   "c": ("count", None)}, num_groups_cap=32)
+        q = q.join(dim_c6, fk="c6", cols=["d6_cat"])  # PK-FK join (§8)
+        return q.groupby(["d6_cat"], {"s": ("sum", "measure"),
+                                      "c": ("count", None)}, num_groups_cap=128)
 
     def q2(t, thresh):
         q = Query(t)

@@ -13,7 +13,7 @@ import jax
 
 from repro.core import arithmetic, compress
 from repro.core.partition import PartitionedQuery, PartitionedTable
-from repro.core.plan import Query, col, pk_fk_gather
+from repro.core.plan import Query, col
 from repro.core.table import Table
 from benchmarks.common import time_fn, write_csv
 
@@ -28,6 +28,7 @@ def make_query(t):
 # paper Table 7: query-specific multi-column sort orders
 SORT_ORDERS = {
     "Q1": ("returnflag", "linestatus", "shipdate", "quantity"),
+    "Q3": ("orderkey",),
     "Q6": ("quantity", "discount", "shipdate"),
     "Q17": ("partkey",),
     "Q19": ("partkey",),
@@ -45,11 +46,22 @@ def make_lineitem(rng, n, order=None):
         "price": (rng.random(n).astype(np.float32) * 1000),
         "tax": rng.integers(0, 9, n).astype(np.int32),
         "partkey": rng.integers(0, n // 30, n).astype(np.int32),
+        "orderkey": rng.integers(0, n // 4, n).astype(np.int32),
     }
     if order:
         perm = np.lexsort(tuple(cols[c] for c in reversed(order)))
         cols = {k: v[perm] for k, v in cols.items()}
     return cols
+
+
+def make_orders(rng, n_orders):
+    """ORDERS-like dimension: surrogate PK (stored key-ordered, so the
+    join build side needs no sort) + filter/group attributes."""
+    return {
+        "orderkey": np.arange(n_orders, dtype=np.int32),
+        "orderdate": rng.integers(0, 366, n_orders).astype(np.int32),
+        "shippriority": rng.integers(0, 2, n_orders).astype(np.int32),
+    }
 
 
 def q1(t):
@@ -60,6 +72,19 @@ def q1(t):
                       "sum_price": ("sum", "price"),
                       "avg_disc": ("avg", "discount"),
                       "cnt": ("count", None)}, num_groups_cap=16))
+
+
+def q3(t, orders_table):
+    """Q3 analogue (paper §8/App. A.3 shape): fact filter + PK-FK join
+    against a filtered dimension + group-by on gathered attributes."""
+    return (make_query(t)
+            .filter(col("shipdate") > 1200)
+            .join(orders_table, fk="orderkey",
+                  cols=["orderdate", "shippriority"],
+                  where=col("orderdate") < 180)
+            .groupby(["orderdate", "shippriority"],
+                     {"revenue": ("sum", "price"), "cnt": ("count", None)},
+                     num_groups_cap=512))
 
 
 def q6(t):
@@ -91,9 +116,13 @@ def q19(t, part_keys):
 def run(n=2_000_000):
     rng = np.random.default_rng(2)
     part_keys = np.unique(rng.integers(0, n // 30, n // 600)).astype(np.int32)
+    orders_table = Table.from_arrays(
+        make_orders(rng, n // 4),
+        cfg=compress.CompressionConfig(plain_threshold=1_000))
 
     rows = []
-    for qname, qfn in [("Q1", q1), ("Q6", q6), ("Q17", q17), ("Q19", q19)]:
+    for qname, qfn in [("Q1", q1), ("Q3", q3), ("Q6", q6), ("Q17", q17),
+                       ("Q19", q19)]:
         data = make_lineitem(rng, n, order=SORT_ORDERS[qname])
         t_comp = Table.from_arrays(
             data, cfg=compress.CompressionConfig(plain_threshold=1_000))
@@ -103,7 +132,12 @@ def run(n=2_000_000):
         rec = {"query": qname, "rows": n,
                "rle_cols": sum("RLE" in t_comp.encoding_of(k) for k in data)}
         for label, t in [("plain", t_plain), ("compressed", t_comp)]:
-            q = qfn(t, part_keys) if qname in ("Q17", "Q19") else qfn(t)
+            if qname in ("Q17", "Q19"):
+                q = qfn(t, part_keys)
+            elif qname == "Q3":
+                q = qfn(t, orders_table)
+            else:
+                q = qfn(t)
             rec[f"{label}_ms"] = time_fn(lambda: q.run(), warmup=1,
                                          iters=3) * 1e3
             rec[f"{label}_MiB"] = t.nbytes() / 2**20

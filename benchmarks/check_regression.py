@@ -1,0 +1,56 @@
+"""Bench regression gate: diff a fresh bench JSON against the committed
+baseline and fail on a >threshold drop of a speedup metric.
+
+CI usage (bench-smoke job)::
+
+    PYTHONPATH=src python -m benchmarks.run --quick --only groupby
+    python -m benchmarks.check_regression \
+        artifacts/bench/BENCH_groupby_quick.json \
+        artifacts/bench/BENCH_groupby.json \
+        --metric speedup_sort_free_grouping --max-regression 0.30
+
+Speedup ratios are scale-dependent (17.9x at the committed 10M-row
+``BENCH_groupby.json``, ~6x at the 300k-row ``--quick`` scale CI runs),
+so the gate compares SAME-scale reports only — the committed
+``BENCH_groupby_quick.json`` is the quick-scale baseline, and a row-count
+mismatch is an error rather than a silently meaningless diff. The 30%
+margin is deliberately loose for shared runners: the gate catches "the
+sort-free path stopped firing / got slower than the argsort path" class
+regressions, not single-digit noise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--metric", default="speedup_sort_free_grouping")
+    ap.add_argument("--max-regression", type=float, default=0.30,
+                    help="maximal allowed fractional drop vs baseline")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    if base.get("rows") != fresh.get("rows"):
+        print(f"[check_regression] ERROR: baseline rows={base.get('rows')} "
+              f"!= fresh rows={fresh.get('rows')} — speedups are "
+              "scale-dependent; compare same-scale reports")
+        return 2
+    b, g = float(base[args.metric]), float(fresh[args.metric])
+    floor = b * (1.0 - args.max_regression)
+    verdict = "OK" if g >= floor else "REGRESSION"
+    print(f"[check_regression] {args.metric}: baseline {b:.3f} "
+          f"(rows={base.get('rows')}), fresh {g:.3f} "
+          f"(rows={fresh.get('rows')}), floor {floor:.3f} -> {verdict}")
+    return 0 if g >= floor else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

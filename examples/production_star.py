@@ -7,12 +7,19 @@ mixed encodings, dimension tables, bridge-table semi-joins. Runs the paper's
 Q1/Q2 templates (7-10 semi-joins + PK-FK join + SUM group-by) on compressed
 vs plain representations and prints the speedup + memory table.
 """
+import os
+import sys
+
 import numpy as np
-import jax.numpy as jnp
 
 from repro.core import compress
-from repro.core.plan import Query, col, pk_fk_gather
+from repro.core.plan import Query
 from repro.core.table import Table
+
+# the `benchmarks` package lives at the repo root, not under src/
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
 
 rng = np.random.default_rng(42)
 N = 1_500_000
@@ -35,6 +42,12 @@ print(f"  encodings: {''.join(encs)}  (R=RLE, P=Plain, I/C=composite)")
 
 dims = {"c2": 64, "c3": 256, "c4": 1000, "c5": 4000, "c8": 50,
         "c9": 200, "c10": 2000}
+# c6 dimension table: 16k surrogate PKs + a category attribute; the Q1
+# template's PK-FK join gathers d6_cat and groups on it (DESIGN.md §6)
+dim_c6 = Table.from_arrays({
+    "c6": np.arange(16000, dtype=np.int32),
+    "d6_cat": (np.arange(16000, dtype=np.int32) % 97).astype(np.int32),
+}, cfg=compress.CompressionConfig(plain_threshold=1000))
 
 import time
 for label, t in (("plain", fact_plain), ("compressed", fact)):
@@ -42,8 +55,9 @@ for label, t in (("plain", fact_plain), ("compressed", fact)):
     q = Query(t)
     for cname, card in dims.items():  # 7 semi-joins (paper Q1 shape)
         q = q.semi_join(cname, _semi_keys(rng2, card, 0.5))
-    q = q.groupby(["c12"], {"revenue": ("sum", "measure"),
-                            "orders": ("count", None)}, num_groups_cap=32)
+    q = q.join(dim_c6, fk="c6", cols=["d6_cat"])  # PK-FK join (§8)
+    q = q.groupby(["d6_cat"], {"revenue": ("sum", "measure"),
+                               "orders": ("count", None)}, num_groups_cap=128)
     res = q.run()  # compile
     t0 = time.perf_counter()
     for _ in range(3):

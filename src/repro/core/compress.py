@@ -82,6 +82,20 @@ def column_domain(values: np.ndarray,
     return (lo, hi - lo + 1)
 
 
+def column_is_sorted(values: np.ndarray) -> bool:
+    """Host-side check: is the column non-decreasing?
+
+    ``Table.sorted_order`` consults (and memoizes) this so the build side
+    of a PK-FK join (paper §8.1) can skip its sort entirely when the
+    dimension table is already stored in key order — the common case for
+    generated surrogate keys.
+    """
+    values = np.asarray(values)
+    if values.size <= 1:
+        return True
+    return bool(np.all(values[1:] >= values[:-1]))
+
+
 def column_minmax(values: np.ndarray) -> Tuple[float, float]:
     """Host-side zone-map entry (min, max) for a column slice.
 

@@ -19,6 +19,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import primitives as prim
 from repro.kernels import dispatch
@@ -382,8 +383,8 @@ class MergedGroupBy:
     """Host-side merged group-by result: exact-size numpy arrays, groups in
     lexicographic key order (np.unique)."""
 
-    keys: Dict[str, "np.ndarray"]
-    aggs: Dict[str, "np.ndarray"]
+    keys: Dict[str, np.ndarray]
+    aggs: Dict[str, np.ndarray]
     num_groups: int
 
 
@@ -398,7 +399,6 @@ def merge_groupby_partials(results: Sequence[GroupByResult],
     output merges under its combine rule (sum/count add, min/max extremes)
     and avg finalizes as merged-sum / merged-count.
     """
-    import numpy as np
     from repro.core import plan as plan_mod
 
     partial_specs, finalize = plan_mod.decompose_specs(specs)

@@ -26,11 +26,15 @@ from repro.core.encodings import (
     IndexColumn,
     IndexMask,
     PlainColumn,
+    PlainIndexColumn,
     PlainMask,
     RLEColumn,
+    RLEIndexColumn,
     RLEMask,
+    decode_column,
     valid_slots,
 )
+from repro.kernels import dispatch
 
 
 @jax.tree_util.register_dataclass
@@ -96,10 +100,11 @@ def join_index(left, right, cap_pairs: int) -> JoinIndex:
     rkey = jnp.where(valid_slots(re_.n, capR), re_.keys, big)
     order = jnp.argsort(rkey)
     rk = rkey[order]
-    # probe: match range per left entry
+    # probe: match range per left entry (dispatch-routed binary search —
+    # the bucketize kernel on TPU, XLA searchsorted otherwise)
     lkey = jnp.where(valid_slots(le.n, capL), le.keys, big)
-    lo = jnp.searchsorted(rk, lkey, side="left")
-    hi = jnp.searchsorted(rk, lkey, side="right")
+    lo = dispatch.bucketize(rk, lkey, right=False)
+    hi = dispatch.bucketize(rk, lkey, right=True)
     cnt = jnp.where(valid_slots(le.n, capL) & (lkey != big), hi - lo, 0)
     # expand (left_entry, right_sorted_slot) pairs
     slot, l_ent, valid, n_pairs = prim.range_arange_capped(
@@ -148,18 +153,96 @@ def gather_rows(col, rows: jax.Array, valid: jax.Array):
     if isinstance(col, PlainColumn):
         vals = col.decode()[rows]
     elif isinstance(col, RLEColumn):
-        run = jnp.searchsorted(col.ends, rows, side="left").astype(POS_DTYPE)
+        run = dispatch.bucketize(col.ends, rows, right=False).astype(POS_DTYPE)
         run = jnp.minimum(run, col.capacity - 1)
         inside = (rows >= col.starts[run]) & (rows <= col.ends[run]) & (run < col.n)
         vals = jnp.where(inside, col.values[run], 0)
     elif isinstance(col, IndexColumn):
-        slot = jnp.searchsorted(col.positions, rows, side="left").astype(POS_DTYPE)
+        slot = dispatch.bucketize(col.positions, rows,
+                                  right=False).astype(POS_DTYPE)
         slot = jnp.minimum(slot, col.capacity - 1)
         hit = (col.positions[slot] == rows) & (slot < col.n)
         vals = jnp.where(hit, col.values[slot], 0)
     else:
         raise TypeError(type(col))
     return jnp.where(valid, vals, 0)
+
+
+# ---------------------------------------------------------------------------
+# PK-FK star-schema join (paper §8.1 + Table 6): probe a sorted unique-key
+# dimension side at ENCODING granularity — one binary search per run/point/
+# row, never a run expansion (a PK match is at most one dimension row, so
+# the Join Index degenerates to a gather and stays in the fact encoding).
+# ---------------------------------------------------------------------------
+
+
+def pk_fk_join(fact_key_col, dim_keys: jax.Array, n_dim: jax.Array,
+               payloads: dict, fill=0):
+    """Sort-merge PK-FK probe: returns ``(mask, gathered)``.
+
+    ``dim_keys`` is the build side — surviving dimension PK values in the
+    fact key's value space, sorted, sentinel-padded past ``n_dim`` (the
+    plan layer prepares it once per query from ingest-recorded sort order).
+    ``payloads`` maps names to dense per-dimension-row value arrays in the
+    same order.
+
+    ``mask`` is the inner-join membership mask in the fact column's own
+    encoding (whole RLE runs pass/fail together — §8.1's "treat each run
+    like a single row"); ``gathered`` maps each payload name to a column in
+    the fact key's encoding carrying the matched dimension attribute (the
+    Table 6 Join-Index output applied to the payload, without expansion).
+    Composite fact encodings (Plain+Index / RLE+Index) probe their decoded
+    row-level form.
+    """
+    if isinstance(fact_key_col, (PlainIndexColumn, RLEIndexColumn)):
+        fact_key_col = PlainColumn(values=decode_column(fact_key_col),
+                                   nrows=fact_key_col.nrows)
+
+    def probe(keys, kvalid):
+        slot = dispatch.bucketize(dim_keys, keys, right=False)
+        slot_c = jnp.minimum(slot, dim_keys.shape[0] - 1)
+        hit = kvalid & (slot < n_dim) & (dim_keys[slot_c] == keys)
+        return slot_c, hit
+
+    def gathered_values(p, slot, hit):
+        return jnp.where(hit, p[slot], jnp.asarray(fill, p.dtype))
+
+    if isinstance(fact_key_col, PlainColumn):
+        slot, hit = probe(fact_key_col.decode(), True)
+        mask = PlainMask(values=hit, nrows=fact_key_col.nrows)
+        gathered = {
+            name: PlainColumn(values=gathered_values(p, slot, hit),
+                              nrows=fact_key_col.nrows)
+            for name, p in payloads.items()}
+        return mask, gathered
+
+    if isinstance(fact_key_col, RLEColumn):
+        c = fact_key_col
+        slot, hit = probe(c.values, valid_slots(c.n, c.capacity))
+        (s, e), n = prim.compact(hit, (c.starts, c.ends), c.capacity,
+                                 (c.nrows, c.nrows))
+        mask = RLEMask(starts=s, ends=e, n=n, nrows=c.nrows)
+        # gathered columns keep the fact key's FULL run structure (misses
+        # hold ``fill`` and are excluded by the mask), so later alignment
+        # sees the same segmentation as the key column itself.
+        gathered = {
+            name: RLEColumn(values=gathered_values(p, slot, hit),
+                            starts=c.starts, ends=c.ends, n=c.n, nrows=c.nrows)
+            for name, p in payloads.items()}
+        return mask, gathered
+
+    if isinstance(fact_key_col, IndexColumn):
+        c = fact_key_col
+        slot, hit = probe(c.values, valid_slots(c.n, c.capacity))
+        (pos,), n = prim.compact(hit, (c.positions,), c.capacity, (c.nrows,))
+        mask = IndexMask(positions=pos, n=n, nrows=c.nrows)
+        gathered = {
+            name: IndexColumn(values=gathered_values(p, slot, hit),
+                              positions=c.positions, n=c.n, nrows=c.nrows)
+            for name, p in payloads.items()}
+        return mask, gathered
+
+    raise TypeError(type(fact_key_col))
 
 
 # ---------------------------------------------------------------------------
@@ -175,7 +258,7 @@ def semi_join_mask(left, right_keys: jax.Array, n_right: jax.Array):
     pass/fail together (App. D's 'early filtering of entire runs').
     """
     def member(keys, kvalid):
-        lo = jnp.searchsorted(right_keys, keys, side="left")
+        lo = dispatch.bucketize(right_keys, keys, right=False)
         lo_c = jnp.minimum(lo, right_keys.shape[0] - 1)
         return kvalid & (lo < n_right) & (right_keys[lo_c] == keys)
 

@@ -8,8 +8,8 @@ single-resident-table ``plan.Query`` path lacks:
     ``Table`` with per-partition heterogeneous encodings chosen by the §9
     heuristics, plus host-side per-partition min/max *zone maps*,
   * predicate pushdown / partition skipping — a partition whose zone maps
-    prove a query's filters and semi-joins select nothing is never
-    transferred to the device,
+    prove a query's filters, semi-joins and PK-FK join key sets select
+    nothing is never transferred to the device,
   * ``PartitionedQuery`` — streams the jitted ``Query`` program partition by
     partition (double-buffering the host->device transfer of partition k+1
     against compute on k) and merges decomposable aggregate partials.
@@ -41,6 +41,7 @@ from repro.core.plan import (
     RangePred,
     _AggOp,
     _FilterOp,
+    _JoinOp,
     _MapOp,
     _SemiJoinOp,
 )
@@ -353,6 +354,21 @@ def partition_can_match(part: Partition, ops, table: PartitionedTable) -> bool:
             keys = np.asarray(op.keys)
             if not np.any((keys >= lo) & (keys <= hi)):
                 return False
+        elif isinstance(op, _JoinOp):
+            # FK zone-map pushdown (DESIGN.md §6): the surviving dimension
+            # key set (prepared eagerly, once) prunes fact partitions whose
+            # FK interval misses every key — inner-join semantics mean such
+            # a partition contributes nothing.
+            keys = op.host_keys
+            if keys is not None and op.fk in zl:
+                lo, hi = zl[op.fk], zh[op.fk]
+                if not np.any((keys >= lo) & (keys <= hi)):
+                    return False
+            # gathered columns rebind names: ingest zone maps for any
+            # shadowed fact column no longer describe the pipeline values
+            for out in op.out:
+                zl.pop(out, None)
+                zh.pop(out, None)
     return True
 
 
@@ -362,8 +378,10 @@ def partition_can_match(part: Partition, ops, table: PartitionedTable) -> bool:
 
 
 class PartitionedQuery(Query):
-    """A ``Query`` over a ``PartitionedTable``: same staging API, streaming
-    partial-aggregate execution.
+    """A ``Query`` over a ``PartitionedTable``: same staging API (including
+    ``join`` against host-resident dimension tables — the dimension side is
+    prepared once and broadcast to every partition's program invocation),
+    streaming partial-aggregate execution.
 
     The pipeline must terminate in ``aggregate`` or ``groupby`` (partials of
     a bare filter are the per-partition masks, which have no merge story —
@@ -399,7 +417,9 @@ class PartitionedQuery(Query):
                 "partitioned execution requires a terminal aggregate() or "
                 "groupby() (add e.g. a count aggregate to materialize a "
                 "filter result)")
-        key_sets = tuple(self._prepare_key_sets())
+        # preparation FIRST: join prep records host_keys on each _JoinOp,
+        # which partition_can_match's FK zone-map pushdown reads below
+        key_sets = tuple(self._prepare_inputs())
         if jit:
             if getattr(self, "_jitted", None) is None:
                 self._jitted = jax.jit(self._counted_program())

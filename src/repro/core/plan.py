@@ -24,15 +24,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import arithmetic, groupby, join as join_mod, logical
+from repro.core import arithmetic, compress, groupby, join as join_mod, logical
 from repro.core.encodings import (
     IndexColumn,
     PlainColumn,
     PlainIndexColumn,
     RLEColumn,
     RLEIndexColumn,
+    decode_column,
+    decode_mask,
 )
 from repro.core.table import Table
+from repro.kernels import dispatch
 
 
 # --------------------------- predicate expressions -------------------------
@@ -203,6 +206,25 @@ class _SemiJoinOp:
 
 
 @dataclasses.dataclass
+class _JoinOp:
+    """PK-FK join against a resident dimension table (DESIGN.md §6).
+
+    ``host_keys`` is filled by ``Query._prepare_join_side``: the surviving
+    dimension PK values in the fact FK's value space, sorted — the
+    partitioned executor pushes them into FK zone maps (a partition whose
+    FK min/max interval misses every surviving key is never transferred).
+    """
+
+    fk: str  # fact-side foreign-key column
+    on: str  # dimension-side primary-key column
+    cols: Tuple[str, ...]  # dimension columns to gather
+    out: Tuple[str, ...]  # pipeline names the gathered columns bind to
+    dim: object  # Table (host-resident dimension)
+    where: object = None  # predicate evaluated eagerly on the dimension
+    host_keys: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
 class _GroupByOp:
     group: Tuple[str, ...]
     specs: Tuple[Tuple[str, str, Optional[str]], ...]
@@ -220,24 +242,116 @@ class _MapOp:
     fn: object  # columns dict -> column
 
 
+class _SchemaView:
+    """Layered name resolution over a staged pipeline.
+
+    ``filter`` predicates may reference columns bound mid-pipeline by
+    ``join`` (gathered dimension attributes, dictionary-coded in the
+    DIMENSION's code space) or ``map`` (computed columns with no ingest
+    metadata). This view answers the two questions the predicate machinery
+    asks — ``encoding_of`` (App. D ordering hints) and ``code_for``
+    (dictionary-literal resolution) — against the right origin.
+
+    Resolution is POSITIONAL: ``observe`` advances the view past one op,
+    so a filter staged before a join that rebinds the same column name
+    still resolves in the fact's space (``build`` snapshots the view at
+    each filter; ``Query.filter`` naturally sees only ops staged so far).
+    """
+
+    def __init__(self, table, ops=()):
+        self._table = table
+        self._joined: Dict[str, tuple] = {}  # out -> (dim, dim_col, fk)
+        self._mapped = set()
+        for op in ops:
+            self.observe(op)
+
+    def observe(self, op) -> None:
+        if isinstance(op, _JoinOp):
+            for out, c in zip(op.out, op.cols):
+                self._joined[out] = (op.dim, c, op.fk)
+                self._mapped.discard(out)
+        elif isinstance(op, _MapOp):
+            self._mapped.add(op.out)
+            self._joined.pop(op.out, None)
+
+    def snapshot(self) -> "_SchemaView":
+        view = _SchemaView(self._table)
+        view._joined = dict(self._joined)
+        view._mapped = set(self._mapped)
+        return view
+
+    def encoding_of(self, name: str) -> str:
+        if name in self._joined:
+            # a gathered column inherits the probe (FK) column's encoding
+            _, _, fk = self._joined[name]
+            name = fk
+        try:
+            return self._table.encoding_of(name)
+        except KeyError:
+            return "PlainColumn"
+
+    def code_for(self, name: str, value):
+        if name in self._joined:
+            dim, dim_col, _ = self._joined[name]
+            return dim.code_for(dim_col, value)
+        if name in self._mapped:
+            return value
+        return self._table.code_for(name, value)
+
+
 class Query:
     """Staged relational pipeline over one (fact) table.
 
-    Dimension-table filtering for semi-joins happens eagerly (dimension
-    tables are small — paper §9.2); the fact-table pipeline is jitted as a
-    single program.
+    Dimension-table filtering for semi-joins and PK-FK joins happens
+    eagerly (dimension tables are small — paper §9.2); the fact-table
+    pipeline is jitted as a single program.
     """
 
     def __init__(self, table: Table):
         self.table = table
         self.ops: List[object] = []
 
+    def _schema(self) -> _SchemaView:
+        return _SchemaView(self.table, self.ops)
+
     def filter(self, expr) -> "Query":
-        self.ops.append(_FilterOp(_rle_first(expr, self.table)))
+        self.ops.append(_FilterOp(_rle_first(expr, self._schema())))
         return self
 
     def semi_join(self, on: str, keys) -> "Query":
         self.ops.append(_SemiJoinOp(on=on, keys=np.asarray(keys)))
+        return self
+
+    def join(self, dim: Table, fk: str, cols: Sequence[str],
+             on: Optional[str] = None, where=None, prefix: str = "") -> "Query":
+        """Stage a PK-FK join: gather ``cols`` from ``dim`` onto the fact
+        pipeline through the ``fk`` column (paper §8.1, DESIGN.md §6).
+
+        ``dim`` must be a resident ``Table`` whose ``on`` column (default:
+        same name as ``fk``) is unique among surviving rows — the build side
+        is sorted once per table via ingest-recorded order metadata.
+        ``where`` filters the dimension eagerly (host-side, once); fact
+        entries whose key misses every surviving dimension row are dropped
+        (inner-join semantics), at encoding granularity — whole RLE runs
+        pass or fail together, with no run expansion. Gathered columns join
+        the pipeline under ``prefix + col`` and are usable in later
+        filters, maps, group-bys and aggregates.
+        """
+        if not isinstance(dim, Table):
+            raise TypeError(
+                "join: the dimension side must be a resident Table "
+                "(a PartitionedTable can only be the probe/fact side)")
+        on = on or fk
+        if on not in dim.columns:
+            raise KeyError(f"join: dimension has no key column {on!r}")
+        missing = [c for c in cols if c not in dim.columns]
+        if missing:
+            raise KeyError(f"join: dimension has no column(s) {missing!r}")
+        if isinstance(self.table, Table) and fk not in self.table.columns:
+            raise KeyError(f"join: fact table has no FK column {fk!r}")
+        out = tuple(prefix + c for c in cols)
+        self.ops.append(_JoinOp(fk=fk, on=on, cols=tuple(cols), out=out,
+                                dim=dim, where=where))
         return self
 
     def map(self, out: str, fn) -> "Query":
@@ -294,19 +408,36 @@ class Query:
             ops = [_decompose_op(op) for op in ops]
         table = self.table
         key_domains = _groupby_key_domains(ops, table)
+        # positional schema snapshots: each filter resolves names/literals
+        # against the pipeline state AT ITS POSITION (a later join may
+        # rebind a column to the dimension's code space)
+        walk = _SchemaView(table)
+        filter_schemas = {}
+        for i, op in enumerate(ops):
+            if isinstance(op, _FilterOp):
+                filter_schemas[i] = walk.snapshot()
+            else:
+                walk.observe(op)
 
         def program(columns, key_sets, base_mask=None):
             mask = base_mask
             env = dict(columns)
             ks = list(key_sets)
-            for op in ops:
+            for i, op in enumerate(ops):
                 if isinstance(op, _FilterOp):
-                    m = eval_predicate(op.expr, env, table)
+                    m = eval_predicate(op.expr, env, filter_schemas[i])
                     mask = m if mask is None else logical.and_masks(mask, m)
                 elif isinstance(op, _SemiJoinOp):
                     keys, n_keys = ks.pop(0)
                     m = join_mod.semi_join_mask(env[op.on], keys, n_keys)
                     mask = m if mask is None else logical.and_masks(mask, m)
+                elif isinstance(op, _JoinOp):
+                    keys, n_keys, payloads = ks.pop(0)
+                    m, gathered = join_mod.pk_fk_join(env[op.fk], keys,
+                                                      n_keys, payloads)
+                    mask = m if mask is None else logical.and_masks(mask, m)
+                    for out, c in zip(op.out, op.cols):
+                        env[out] = gathered[c]
                 elif isinstance(op, _MapOp):
                     env[op.out] = op.fn(env)
                 elif isinstance(op, _GroupByOp):
@@ -345,28 +476,115 @@ class Query:
         return None
 
     def run(self, jit: bool = True):
-        """Execute: eager key-set preparation + ONE jitted fact pipeline.
+        """Execute: eager key-set/dimension preparation + ONE jitted fact
+        pipeline.
 
         The jitted program is memoized on the Query: repeated ``run()``
         calls (warm queries, the paper's measurement mode §9) re-execute
         the compiled program without retracing.
         """
-        key_sets = tuple(self._prepare_key_sets())
+        key_sets = tuple(self._prepare_inputs())
         if not jit:
             return self.build()(self.table.columns, key_sets)
         if getattr(self, "_jitted", None) is None:
             self._jitted = jax.jit(self.build())
         return self._jitted(self.table.columns, key_sets)
 
-    def _prepare_key_sets(self):
-        key_sets = []
+    def _prepare_inputs(self):
+        """Eager host-side preparation, one entry per semi-join / join op in
+        (reordered) pipeline order — the program pops them positionally, so
+        this reorders FIRST, exactly as ``build`` will."""
+        self._reorder_semijoins()
+        prepared = []
         for op in self.ops:
             if isinstance(op, _SemiJoinOp):
                 keys = np.unique(op.keys)
                 arr = jnp.asarray(np.concatenate([
                     keys, np.full((1,), _sentinel_for(keys.dtype), keys.dtype)]))
-                key_sets.append((arr, jnp.asarray(len(keys), jnp.int32)))
-        return key_sets
+                prepared.append((arr, jnp.asarray(len(keys), jnp.int32)))
+            elif isinstance(op, _JoinOp):
+                prepared.append(self._prepare_join_side(op))
+        return prepared
+
+    def _prepare_join_side(self, op: _JoinOp):
+        """Build the dimension side of a PK-FK join, ONCE per execution:
+
+          1. evaluate ``where`` eagerly on the (small) dimension table,
+          2. bring keys + payloads into the dimension's ingest-recorded
+             sorted key order (``Table.sorted_order`` — no per-query sort
+             when the dimension is stored key-ordered),
+          3. translate surviving PK values into the fact FK's stored value
+             space (dictionary codes when the FK is dictionary-encoded),
+          4. pad to a pow2 capacity with sentinel keys so re-preparation
+             with a different surviving-key count reuses the jit cache.
+
+        Returns ``(keys, n, payloads)`` device arrays and records the host
+        key set on the op for FK zone-map partition pruning.
+        """
+        dim = op.dim
+        keep = None
+        if op.where is not None:
+            mask, _ = Query(dim).filter(op.where).build()(dim.columns, ())
+            keep = np.asarray(decode_mask(mask))
+        order = dim.sorted_order(op.on)
+        key_vals = np.asarray(decode_column(dim.columns[op.on]))
+        if op.on in dim.dictionaries:
+            key_vals = dim.dictionaries[op.on][key_vals]  # codes -> values
+        payloads = {c: np.asarray(decode_column(dim.columns[c]))
+                    for c in op.cols}
+        if order is not None:
+            key_vals = key_vals[order]
+            payloads = {c: v[order] for c, v in payloads.items()}
+            if keep is not None:
+                keep = keep[order]
+        if keep is not None:
+            key_vals = key_vals[keep]
+            payloads = {c: v[keep] for c, v in payloads.items()}
+        # dictionary codes are assigned in sorted value order, so the
+        # translation below is monotone: key order survives it.
+        fact_dicts = getattr(self.table, "dictionaries", None) or {}
+        if op.fk in fact_dicts:
+            d = fact_dicts[op.fk]
+            if len(d) == 0:
+                hit = np.zeros(len(key_vals), bool)
+                keys = np.zeros((0,), np.int32)
+            else:
+                idx = np.searchsorted(d, key_vals)
+                idx_c = np.minimum(idx, len(d) - 1)
+                hit = d[idx_c] == key_vals
+                keys = idx_c[hit].astype(np.int32)
+            payloads = {c: v[hit] for c, v in payloads.items()}
+        elif key_vals.dtype.kind in ("U", "S", "O"):
+            raise ValueError(
+                f"join: dimension key {op.on!r} is string-valued but fact "
+                f"FK {op.fk!r} is not dictionary-encoded — the key spaces "
+                "cannot be aligned")
+        elif key_vals.dtype.kind in "iub":
+            # keys outside the int32 device value domain cannot match any
+            # fact FK value — DROP them (an astype would wrap them onto
+            # valid codes and fabricate matches)
+            i32 = np.iinfo(np.int32)
+            in_range = (key_vals >= i32.min) & (key_vals <= i32.max)
+            if not np.all(in_range):
+                key_vals = key_vals[in_range]
+                payloads = {c: v[in_range] for c, v in payloads.items()}
+            keys = key_vals.astype(np.int32)
+        else:
+            keys = key_vals.astype(np.float32)
+        if keys.size and np.any(keys[1:] == keys[:-1]):
+            raise ValueError(
+                f"join: dimension key {op.on!r} is not unique among "
+                "surviving rows — PK-FK joins need a unique build side")
+        op.host_keys = keys
+        n = len(keys)
+        cap = compress.next_pow2(n + 1, 8)
+        sentinel = _sentinel_for(keys.dtype)
+        keys_p = np.concatenate(
+            [keys, np.full((cap - n,), sentinel, keys.dtype)])
+        pay_p = {c: np.concatenate([v, np.zeros((cap - n,), v.dtype)])
+                 for c, v in payloads.items()}
+        return (jnp.asarray(keys_p), jnp.asarray(n, jnp.int32),
+                {c: jnp.asarray(v) for c, v in pay_p.items()})
 
 
 def _groupby_key_domains(ops, table):
@@ -382,6 +600,15 @@ def _groupby_key_domains(ops, table):
     for op in ops:
         if isinstance(op, _MapOp):
             live.pop(op.out, None)
+        elif isinstance(op, _JoinOp):
+            # gathered dimension attributes carry the DIMENSION's ingest
+            # domain (global dictionary code space / integer bounds), so a
+            # group-by on them can still take the sort-free path
+            for out, c in zip(op.out, op.cols):
+                live.pop(out, None)
+                dom = (getattr(op.dim, "domains", None) or {}).get(c)
+                if dom is not None:
+                    live[out] = dom
         elif isinstance(op, _GroupByOp):
             doms = {g: live[g] for g in op.group if g in live}
             return doms or None
@@ -537,7 +764,7 @@ def pk_fk_gather(fact_key_col, dim_keys_sorted: jax.Array, dim_payload: jax.Arra
     column in the fact key's encoding with payload values.
     """
     def lookup(keys):
-        slot = jnp.searchsorted(dim_keys_sorted, keys, side="left")
+        slot = dispatch.bucketize(dim_keys_sorted, keys, right=False)
         slot_c = jnp.minimum(slot, dim_keys_sorted.shape[0] - 1)
         hit = dim_keys_sorted[slot_c] == keys
         vals = dim_payload[slot_c]

@@ -50,6 +50,13 @@ class Table:
     # integer/dictionary columns — the sort-free grouping contract
     # (DESIGN.md §5): every value a query can observe lies in the domain.
     domains: Dict[str, Tuple[int, int]] = dataclasses.field(default_factory=dict)
+    # per-column sorted-order metadata, filled LAZILY by ``sorted_order``
+    # on first use as a join build side (None = stored non-decreasing, no
+    # permutation needed; else the memoized argsort). Not computed for
+    # every column at ingest — most columns are never join keys, and the
+    # PK-FK build-side contract only needs "sorted once per TABLE".
+    _sort_orders: Dict[str, object] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @classmethod
     def from_arrays(
@@ -102,6 +109,21 @@ class Table:
         if idx >= len(d) or d[idx] != value:
             return -1  # literal not present: predicate selects nothing
         return int(idx)
+
+    def sorted_order(self, name: str):
+        """Permutation sorting column ``name``'s stored (code-space) values,
+        or ``None`` when the column is already stored non-decreasing (the
+        common case for surrogate PKs — no sort, no permutation gather).
+
+        Memoized on the table: the build side of a PK-FK join is sorted
+        once per TABLE, never per query (paper §8.1's one-time build).
+        """
+        if name not in self._sort_orders:
+            vals = np.asarray(decode_column(self.columns[name]))
+            self._sort_orders[name] = (
+                None if compress.column_is_sorted(vals)
+                else np.argsort(vals, kind="stable"))
+        return self._sort_orders[name]
 
     def nbytes(self) -> int:
         return sum(compress.encoded_nbytes(c) for c in self.columns.values())

@@ -3,9 +3,28 @@
 NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
 (DESIGN.md: only launch/dryrun.py forces 512 host devices). Multi-device
 tests spawn subprocesses that set the flag themselves.
+
+Hypothesis profiles are registered HERE, once, and selected via the
+``HYPOTHESIS_PROFILE`` env var (the CI fast job exports
+``HYPOTHESIS_PROFILE=ci``): "dev" caps every module at 25 examples — a
+deliberate reduction from the historical per-module counts (40/30/25) to
+keep the local suite bounded; "ci" caps examples hard (10) so the tier-1
+fast job stays minutes, not tens of minutes. Test modules must NOT call
+``settings.load_profile`` themselves — that would override this choice.
 """
+import os
+
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("dev", max_examples=25, deadline=None)
+    _hyp_settings.register_profile("ci", max_examples=10, deadline=None)
+    _hyp_settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ModuleNotFoundError:  # tier-1 degrades gracefully without hypothesis
+    pass
 
 
 @pytest.fixture

@@ -3,15 +3,14 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")  # tier-1 degrades to skip, not collection error
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
 from repro.core import arithmetic as A
 from repro.core import encodings as E
 
 from conftest import MASK_ENCODERS, make_rle_col
 
-settings.register_profile("ci", max_examples=30, deadline=None)
-settings.load_profile("ci")
+# hypothesis profile comes from tests/conftest.py (HYPOTHESIS_PROFILE)
 
 OPS = {"add": np.add, "sub": np.subtract, "mul": np.multiply}
 

@@ -4,7 +4,7 @@ import pytest
 
 pytest.importorskip("hypothesis")  # tier-1 degrades to skip, not collection error
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
 from repro.core import encodings as E
 from repro.core import groupby as G
@@ -12,8 +12,7 @@ from repro.core import join as J
 
 from conftest import MASK_ENCODERS, make_rle_col
 
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+# hypothesis profile comes from tests/conftest.py (HYPOTHESIS_PROFILE)
 
 
 def _gb_oracle(keys, vals, sel=None):

@@ -1,0 +1,395 @@
+"""PK-FK star-schema joins through the pipeline (DESIGN.md §6, paper §8).
+
+TPC-H Q3-shaped conformance (fact filter + dimension join + group-by on
+dimension attributes) against a pandas oracle, on both the resident
+``Table`` and out-of-core ``PartitionedTable`` paths, across encoding
+mixes; FK zone-map partition skipping (a pruned partition is never
+transferred); and the dimension-broadcast no-retrace guarantee.
+"""
+import jax
+import numpy as np
+import pytest
+
+pd = pytest.importorskip("pandas")  # oracle; degrades to skip, not error
+
+from repro.core import compress
+from repro.core import partition as P
+from repro.core.groupby import MergedGroupBy
+from repro.core.partition import PartitionedQuery, PartitionedTable
+from repro.core.plan import Query, col
+from repro.core.table import Table
+
+CFG = compress.CompressionConfig(plain_threshold=1000)
+
+
+# ---------------------------------------------------------------------------
+# star-schema generator + oracle
+# ---------------------------------------------------------------------------
+
+
+def make_star(rng, n=30_000, n_orders=400, n_parts=60):
+    """LINEITEM-like fact (sorted by orderkey -> RLE-able FK) + ORDERS/PART
+    dimensions with surrogate PKs and dictionary-encoded attributes."""
+    fact = {
+        "orderkey": np.sort(rng.integers(0, n_orders, n)).astype(np.int32),
+        "partkey": rng.integers(0, n_parts, n).astype(np.int32),
+        "quantity": rng.integers(1, 51, n).astype(np.int32),
+        "price": (rng.random(n) * 1000).astype(np.float32),
+        "shipdate": rng.integers(0, 1000, n).astype(np.int32),
+    }
+    orders = {
+        "orderkey": np.arange(n_orders, dtype=np.int32),
+        "orderdate": rng.integers(0, 365, n_orders).astype(np.int32),
+        "shippriority": rng.integers(0, 2, n_orders).astype(np.int32),
+        "segment": np.array([f"SEG#{i % 5}" for i in range(n_orders)]),
+    }
+    parts = {
+        "partkey": np.arange(n_parts, dtype=np.int32),
+        "brand": np.array([f"BRAND#{i % 7}" for i in range(n_parts)]),
+        "size": rng.integers(1, 9, n_parts).astype(np.int32),
+    }
+    return fact, orders, parts
+
+
+def q3(t, orders_t, date_cut=180):
+    """TPC-H Q3 analogue: fact filter + filtered dimension join + group-by
+    on gathered dimension attributes."""
+    q = PartitionedQuery(t) if isinstance(t, PartitionedTable) else Query(t)
+    return (q.filter(col("shipdate") < 700)
+            .join(orders_t, fk="orderkey", cols=["orderdate", "shippriority"],
+                  where=col("orderdate") < date_cut)
+            .groupby(["shippriority", "orderdate"],
+                     {"revenue": ("sum", "price"), "cnt": ("count", None)},
+                     num_groups_cap=512))
+
+
+def pandas_q3(fact, orders, date_cut=180):
+    f, o = pd.DataFrame(fact), pd.DataFrame(orders)
+    m = f[f.shipdate < 700].merge(o[o.orderdate < date_cut], on="orderkey")
+    return (m.groupby(["shippriority", "orderdate"])
+            .agg(revenue=("price", "sum"), cnt=("price", "size"))
+            .reset_index().sort_values(["shippriority", "orderdate"]))
+
+
+def groupby_rows(res, group_names, agg_names):
+    """Valid groups as (key matrix, agg dict), lex-sorted by key — shared
+    shape for GroupByResult (device, padded) and MergedGroupBy (merged)."""
+    if isinstance(res, MergedGroupBy):
+        ng = res.num_groups
+        keys = np.stack([np.asarray(res.keys[g]) for g in group_names], axis=1)
+        aggs = {a: np.asarray(res.aggs[a]) for a in agg_names}
+    else:
+        ng = int(res.num_groups)
+        keys = np.stack(
+            [np.asarray(res.keys[g])[:ng] for g in group_names], axis=1)
+        aggs = {a: np.asarray(res.aggs[a])[:ng] for a in agg_names}
+    order = np.lexsort(tuple(keys[:, i]
+                             for i in reversed(range(keys.shape[1]))))
+    return keys[order], {a: v[order] for a, v in aggs.items()}, ng
+
+
+def assert_close(got, want, tol=1e-3):
+    got, want = np.asarray(got, np.float64), np.asarray(want, np.float64)
+    denom = np.maximum(np.abs(want), 1.0)
+    np.testing.assert_array_less(np.abs(got - want) / denom, tol)
+
+
+@pytest.fixture
+def transfer_counter(monkeypatch):
+    calls = []
+    real = P.device_put
+
+    def counting_device_put(tree):
+        calls.append(tree)
+        return real(tree)
+
+    monkeypatch.setattr(P, "device_put", counting_device_put)
+    return calls
+
+
+# ---------------------------------------------------------------------------
+# Q3-shaped conformance: Table == PartitionedTable == pandas (acceptance)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("enc", [None, "plain", "rle", "index",
+                                 "rle_index", "plain_index"])
+def test_q3_conformance_all_encodings(rng, enc):
+    fact, orders, _ = make_star(rng)
+    encodings = {"orderkey": enc} if enc else None
+    t = Table.from_arrays(fact, cfg=CFG, encodings=encodings)
+    pt = PartitionedTable.from_arrays(fact, cfg=CFG, num_partitions=5,
+                                      encodings=encodings)
+    ot = Table.from_arrays(orders, cfg=CFG)
+    want = pandas_q3(fact, orders)
+    names = ["shippriority", "orderdate"]
+    single = q3(t, ot).run()
+    parted = q3(pt, ot).run()
+    for res in (single, parted):
+        keys, aggs, ng = groupby_rows(res, names, ["revenue", "cnt"])
+        assert ng == len(want)
+        np.testing.assert_array_equal(keys[:, 0], want.shippriority.values)
+        np.testing.assert_array_equal(keys[:, 1], want.orderdate.values)
+        np.testing.assert_array_equal(aggs["cnt"], want.cnt.values)
+        assert_close(aggs["revenue"], want.revenue.values)
+    # the two engine paths agree with each other, not just with the oracle
+    ks, as_, _ = groupby_rows(single, names, ["revenue", "cnt"])
+    kp, ap, _ = groupby_rows(parted, names, ["revenue", "cnt"])
+    np.testing.assert_array_equal(ks, kp)
+    np.testing.assert_array_equal(as_["cnt"], ap["cnt"])
+    assert_close(as_["revenue"], ap["revenue"], tol=1e-4)
+
+
+def test_two_dimension_star(rng):
+    """Q5/Q10-shaped: two dimension joins, a filter on a gathered string
+    attribute, aggregates over both fact and gathered numeric columns."""
+    fact, orders, parts = make_star(rng)
+    ot = Table.from_arrays(orders, cfg=CFG)
+    pt_dim = Table.from_arrays(parts, cfg=CFG)
+    f = pd.DataFrame(fact).merge(pd.DataFrame(orders), on="orderkey")
+    f = f.merge(pd.DataFrame(parts), on="partkey")
+    m = f[(f.brand == "BRAND#3") & (f.orderdate < 200)]
+    want = (m.groupby("shippriority")
+            .agg(qty=("quantity", "sum"), sz=("size", "sum"),
+                 cnt=("size", "size")).reset_index())
+    for table in (Table.from_arrays(fact, cfg=CFG),
+                  PartitionedTable.from_arrays(fact, cfg=CFG,
+                                               num_partitions=4)):
+        q = PartitionedQuery(table) if isinstance(
+            table, PartitionedTable) else Query(table)
+        res = (q.join(ot, fk="orderkey", cols=["orderdate", "shippriority"],
+                      where=col("orderdate") < 200)
+               .join(pt_dim, fk="partkey", cols=["brand", "size"])
+               .filter(col("brand") == "BRAND#3")
+               .groupby(["shippriority"],
+                        {"qty": ("sum", "quantity"), "sz": ("sum", "size"),
+                         "cnt": ("count", None)}, num_groups_cap=8)
+               .run())
+        keys, aggs, ng = groupby_rows(res, ["shippriority"],
+                                      ["qty", "sz", "cnt"])
+        assert ng == len(want)
+        np.testing.assert_array_equal(keys[:, 0], want.shippriority.values)
+        np.testing.assert_array_equal(aggs["cnt"], want.cnt.values)
+        assert_close(aggs["qty"], want.qty.values)
+        assert_close(aggs["sz"], want.sz.values)
+
+
+def test_groupby_on_dictionary_dim_attribute(rng):
+    """Group keys gathered from a dictionary-encoded dimension attribute
+    decode through the DIMENSION's dictionary."""
+    fact, _, parts = make_star(rng, n=8_000)
+    t = Table.from_arrays(fact, cfg=CFG)
+    dim = Table.from_arrays(parts, cfg=CFG)
+    res = (Query(t).join(dim, fk="partkey", cols=["brand"])
+           .groupby(["brand"], {"c": ("count", None)}, num_groups_cap=16)
+           .run())
+    f = pd.DataFrame(fact).merge(pd.DataFrame(parts), on="partkey")
+    want = f.groupby("brand").size().sort_index()
+    ng = int(res.num_groups)
+    assert ng == len(want)
+    codes = np.asarray(res.keys["brand"])[:ng]
+    order = np.argsort(codes)
+    np.testing.assert_array_equal(dim.dictionaries["brand"][codes[order]],
+                                  want.index.values)
+    np.testing.assert_array_equal(np.asarray(res.aggs["c"])[:ng][order],
+                                  want.values)
+
+
+def test_join_then_filter_string_literal_resolves_in_dim_space(rng):
+    fact, _, parts = make_star(rng, n=6_000)
+    t = Table.from_arrays(fact, cfg=CFG)
+    dim = Table.from_arrays(parts, cfg=CFG)
+    r = (Query(t).join(dim, fk="partkey", cols=["brand"])
+         .filter(col("brand") == "BRAND#5")
+         .aggregate({"c": ("count", None)}).run())
+    f = pd.DataFrame(fact).merge(pd.DataFrame(parts), on="partkey")
+    assert int(r["c"]) == int((f.brand == "BRAND#5").sum())
+    # absent literal selects nothing (code_for -> -1)
+    r0 = (Query(t).join(dim, fk="partkey", cols=["brand"])
+          .filter(col("brand") == "NO#SUCH")
+          .aggregate({"c": ("count", None)}).run())
+    assert int(r0["c"]) == 0
+
+
+def test_prejoin_filter_resolves_in_fact_space_despite_shadowing(rng):
+    """Regression: a filter staged BEFORE a join that rebinds the same
+    column name must resolve its string literal in the FACT's dictionary,
+    not the dimension's (schema snapshots are positional)."""
+    fact = {"cat": np.array(["A", "B", "A", "A"] * 25),
+            "k": np.tile(np.arange(4, dtype=np.int32), 25)}
+    dim = Table.from_arrays({
+        "k": np.arange(4, dtype=np.int32),
+        "cat": np.array(["@", "A", "@", "@"]),  # different code space
+    }, cfg=CFG)
+    t = Table.from_arrays(fact, cfg=CFG)
+    r = (Query(t)
+         .filter(col("cat") == "A")  # fact space: 75 rows
+         .join(dim, fk="k", cols=["cat"])  # rebinds "cat" to dim values
+         .aggregate({"c": ("count", None)}).run())
+    assert int(r["c"]) == 75
+    # ... while a POST-join filter on the same name uses the dim space
+    r2 = (Query(t)
+          .join(dim, fk="k", cols=["cat"])
+          .filter(col("cat") == "@")
+          .aggregate({"c": ("count", None)}).run())
+    want = int(np.isin(fact["k"], [0, 2, 3]).sum())
+    assert int(r2["c"]) == want
+
+
+def test_out_of_int32_dimension_keys_drop_not_wrap(rng):
+    """Regression: a dimension PK outside the int32 device domain cannot
+    match any fact FK — it must be dropped, not wrapped by astype onto a
+    valid code (which fabricated matches)."""
+    fact = {"fk": np.array([5, 7, 7], np.int32),
+            "v": np.ones(3, np.float32)}
+    t = Table.from_arrays(fact, cfg=CFG)
+    # 2**32 + 7 wraps to 7 under a raw astype(int32)
+    dim = Table.from_arrays({
+        "pk": np.array([5, 2**32 + 7], np.int64),
+        "w": np.array([1, 100], np.int32),
+    }, cfg=CFG)
+    r = (Query(t).join(dim, fk="fk", cols=["w"], on="pk")
+         .aggregate({"c": ("count", None), "sw": ("sum", "w")}).run())
+    assert int(r["c"]) == 1  # only fk == 5 matches
+    assert int(float(r["sw"])) == 1
+
+
+def test_dictionary_fk_translation(rng):
+    """String FK: fact and dimension dictionaries are DIFFERENT code
+    spaces; the build side is translated into fact codes at prep."""
+    n = 5_000
+    universe = np.array([f"K{i:03d}" for i in range(40)])
+    fact = {"k": np.sort(rng.choice(universe, n)),
+            "v": rng.random(n).astype(np.float32)}
+    dim_keys = np.array([f"K{i:03d}" for i in range(0, 60, 2)])  # superset
+    dim = Table.from_arrays(
+        {"k": dim_keys, "w": (np.arange(30) * 10).astype(np.int32)}, cfg=CFG)
+    t = Table.from_arrays(fact, cfg=CFG)
+    r = (Query(t).join(dim, fk="k", cols=["w"])
+         .aggregate({"c": ("count", None), "sw": ("sum", "w")}).run())
+    m = pd.DataFrame(fact).merge(
+        pd.DataFrame({"k": dim_keys, "w": np.arange(30) * 10}), on="k")
+    assert int(r["c"]) == len(m)
+    assert int(float(r["sw"])) == int(m.w.sum())
+
+
+def test_duplicate_pk_raises(rng):
+    t = Table.from_arrays({"k": np.arange(100, dtype=np.int32)}, cfg=CFG)
+    dim = Table.from_arrays({"k": np.array([1, 1, 2], np.int32),
+                             "w": np.arange(3, dtype=np.int32)}, cfg=CFG)
+    with pytest.raises(ValueError, match="not unique"):
+        Query(t).join(dim, fk="k", cols=["w"]).aggregate(
+            {"c": ("count", None)}).run()
+
+
+def test_join_validation_errors(rng):
+    t = Table.from_arrays({"k": np.arange(10, dtype=np.int32)}, cfg=CFG)
+    dim = Table.from_arrays({"k": np.arange(3, dtype=np.int32)}, cfg=CFG)
+    with pytest.raises(KeyError):
+        Query(t).join(dim, fk="k", cols=["missing"])
+    with pytest.raises(KeyError):
+        Query(t).join(dim, fk="nope", cols=["k"])
+    pt = PartitionedTable.from_arrays({"k": np.arange(10, dtype=np.int32)},
+                                      cfg=CFG, num_partitions=2)
+    with pytest.raises(TypeError):
+        Query(t).join(pt, fk="k", cols=["k"])
+
+
+# ---------------------------------------------------------------------------
+# FK zone-map pushdown: pruned partitions are never transferred (acceptance)
+# ---------------------------------------------------------------------------
+
+
+def test_fk_zone_map_skips_partitions(rng, transfer_counter):
+    fact, orders, _ = make_star(rng, n=40_000, n_orders=1000)
+    pt = PartitionedTable.from_arrays(fact, cfg=CFG, num_partitions=8)
+    dim = Table.from_arrays(orders, cfg=CFG)
+    # dimension filter survives only PKs < 100; the fact is sorted by
+    # orderkey, so only the leading partition(s) can hold matching FKs
+    q = (PartitionedQuery(pt)
+         .join(dim, fk="orderkey", cols=["orderdate"],
+               where=col("orderkey") < 100)
+         .aggregate({"c": ("count", None), "s": ("sum", "price")}))
+    r = q.run()
+    sel = fact["orderkey"] < 100
+    assert int(r["c"]) == int(sel.sum())
+    assert_close(r["s"], fact["price"][sel].astype(np.float64).sum())
+    assert q.last_stats["skipped"] >= 5
+    assert len(transfer_counter) == q.last_stats["executed"]
+
+    # an empty surviving key set skips EVERY partition: zero transfers
+    before = len(transfer_counter)
+    q2 = (PartitionedQuery(pt)
+          .join(dim, fk="orderkey", cols=["orderdate"],
+                where=col("orderdate") > 10_000)
+          .aggregate({"c": ("count", None)}))
+    assert int(q2.run()["c"]) == 0
+    assert q2.last_stats["executed"] == 0
+    assert len(transfer_counter) == before
+
+
+# ---------------------------------------------------------------------------
+# dimension broadcast shares ONE compiled program across partitions
+# ---------------------------------------------------------------------------
+
+
+def test_dimension_broadcast_does_not_retrace(rng):
+    fact, orders, _ = make_star(rng, n=32_768)
+    pt = PartitionedTable.from_arrays(fact, cfg=CFG, num_partitions=8)
+    ot = Table.from_arrays(orders, cfg=CFG)
+    q = q3(pt, ot)
+    r = q.run()
+    assert q.last_stats["executed"] >= 4
+
+    def signature(p):
+        return (p.padded_rows, tuple(
+            (name, type(c).__name__, jax.tree_util.tree_map(np.shape, c))
+            for name, c in sorted(p.table.columns.items())))
+
+    distinct = len({str(signature(p)) for p in pt.partitions if p.rows})
+    # the dimension side is prepared once and broadcast as plain program
+    # inputs: compilation count is bounded by the partitions' bucketed
+    # column structure, NOT by the partition count
+    assert q.trace_count <= distinct < q.last_stats["executed"]
+    before = q.trace_count
+    r2 = q.run()  # warm rerun: the dimension side re-preps, no retrace
+    assert q.trace_count == before
+    np.testing.assert_array_equal(
+        groupby_rows(r, ["shippriority", "orderdate"], ["cnt"])[1]["cnt"],
+        groupby_rows(r2, ["shippriority", "orderdate"], ["cnt"])[1]["cnt"])
+
+
+def test_semijoin_reorder_matches_key_sets(rng):
+    """Regression: key sets are prepared AFTER the App.-D RLE-first
+    reorder, so the program pops each semi-join's own keys (a Plain-column
+    semi-join staged before an RLE-column one used to swap them)."""
+    n = 5_000
+    data = {"a": np.sort(rng.integers(0, 50, n)).astype(np.int32),  # RLE
+            "b": rng.integers(0, 50, n).astype(np.int32)}  # Plain
+    t = Table.from_arrays(data, cfg=CFG,
+                          encodings={"a": "rle", "b": "plain"})
+    keys_b = np.arange(0, 10, dtype=np.int32)
+    keys_a = np.arange(30, 50, dtype=np.int32)
+    r = (Query(t).semi_join("b", keys_b).semi_join("a", keys_a)
+         .aggregate({"c": ("count", None)}).run())
+    want = int((np.isin(data["b"], keys_b) & np.isin(data["a"], keys_a)).sum())
+    assert int(r["c"]) == want
+
+
+def test_gathered_column_survives_map_and_semijoin_mix(rng):
+    """Joined attributes compose with the other pipeline ops."""
+    from repro.core import arithmetic
+    fact, orders, _ = make_star(rng, n=10_000)
+    t = Table.from_arrays(fact, cfg=CFG)
+    ot = Table.from_arrays(orders, cfg=CFG)
+    keys = np.arange(0, 200, dtype=np.int32)
+    r = (Query(t)
+         .semi_join("orderkey", keys)
+         .join(ot, fk="orderkey", cols=["shippriority"])
+         .map("w", lambda env: arithmetic.binary_op(
+             env["price"], env["shippriority"], "mul"))
+         .aggregate({"s": ("sum", "w"), "c": ("count", None)}).run())
+    f = pd.DataFrame(fact).merge(pd.DataFrame(orders), on="orderkey")
+    m = f[f.orderkey < 200]
+    assert int(r["c"]) == len(m)
+    assert_close(r["s"], (m.price * m.shippriority).sum())

@@ -3,15 +3,14 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")  # tier-1 degrades to skip, not collection error
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
 from repro.core import encodings as E
 from repro.core import logical as L
 
 from conftest import MASK_ENCODERS
 
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+# hypothesis profile comes from tests/conftest.py (HYPOTHESIS_PROFILE)
 
 PAIRS = [(a, b) for a in MASK_ENCODERS for b in MASK_ENCODERS]
 

@@ -377,9 +377,10 @@ def test_compile_count_is_bucket_bound_not_partition_bound(rng):
 # ---------------------------------------------------------------------------
 
 if HAVE_HYPOTHESIS:
-    settings.register_profile("part", max_examples=12, deadline=None)
-    settings.load_profile("part")
-
+    # profile selection lives in conftest.py; this test builds a
+    # PartitionedTable + jitted query per example, so cap examples locally
+    @pytest.mark.slow
+    @settings(max_examples=12, deadline=None)
     @given(
         n=st.integers(50, 1500),
         seed=st.integers(0, 2**31 - 1),

@@ -4,15 +4,14 @@ import jax.numpy as jnp
 import pytest
 
 pytest.importorskip("hypothesis")  # tier-1 degrades to skip, not collection error
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
 from repro.core import encodings as E
 from repro.core import primitives as P
 
 from conftest import dense_to_rle_mask_np, make_index_mask, make_rle_mask
 
-settings.register_profile("ci", max_examples=40, deadline=None)
-settings.load_profile("ci")
+# hypothesis profile comes from tests/conftest.py (HYPOTHESIS_PROFILE)
 
 
 def dense_masks(min_n=4, max_n=96):
