@@ -113,4 +113,20 @@ got_units = {int(s): int(u)
              for s, u in zip(res4.keys["store"], res4.aggs["total_units"])}
 assert got_units == want_units, "partitioned result mismatch!"
 print("  (partitioned result matches numpy oracle)")
+
+# Query 5: RANKED query (DESIGN.md §10) — top-10 paid rows by revenue,
+# ranked in the compressed domain; on the partitioned path, zone-map
+# pruning skips partitions that cannot beat the current 10th-best row.
+q5 = (PartitionedQuery(ptable)
+      .filter(col("status") == "paid")
+      .order_by("revenue", descending=True, limit=10,
+                cols=["region", "store"]))
+res5 = q5.run()
+sel5 = status == "paid"
+order5 = np.argsort(-revenue[sel5].astype(np.int64), kind="stable")
+want_rows = np.flatnonzero(sel5)[order5[:10]]
+assert np.array_equal(res5.positions, want_rows), "ranked result mismatch!"
+print(f"\ntop-10 paid rows by revenue (ranked query): "
+      f"revenue[0]={int(res5.columns['revenue'][0])}, "
+      f"{q5.last_stats.get('ranked_skipped', 0)} partitions ranked-pruned")
 print("quickstart OK")

@@ -11,6 +11,7 @@ Layers:
   compress    — §9 encoding-selection heuristics (host-side ingest)
   table, plan — Table container + jitted query pipelines (App. D rules)
   partition   — partitioned out-of-core execution: zone maps + partial merge
+  order       — ORDER BY / TOP-K / LIMIT + distributed top-k merge (§10)
 """
 from repro.core import (
     arithmetic,
@@ -18,6 +19,7 @@ from repro.core import (
     groupby,
     join,
     logical,
+    order,
     partition,
     plan,
     primitives,
@@ -41,6 +43,7 @@ from repro.core.encodings import (
     make_rle,
     make_rle_mask,
 )
+from repro.core.order import RankedTable
 from repro.core.partition import PartitionedQuery, PartitionedTable
 from repro.core.plan import Query, col
 from repro.core.table import Table

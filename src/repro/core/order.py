@@ -1,0 +1,403 @@
+"""Compressed-domain ordering: ORDER BY / TOP-K / LIMIT (DESIGN.md §10).
+
+Ordering is where entry-level execution pays twice. An RLE column of R runs
+sorts by sorting its R run entries — O(R log R), not O(N log N) — because
+every row of a run shares the run's key; and a dictionary/bounded-domain
+key needs no comparison sort at all: a presence histogram over the dense
+code domain plus one cumulative sum yields exact row ranks
+(``primitives.rank_select_bounded``), the same trick that makes grouping
+sort-free (DESIGN.md §5). Row-level permutations are materialized only for
+the rows the OUTPUT demands — the k survivors of a top-k, never the input.
+
+Three ranking paths, chosen at trace time from encodings + ingest metadata
+(the dispatch-policy discipline of DESIGN.md §5):
+
+  * **bounded-domain**: every key integer-valued with ingest-recorded
+    ``(lo, size)`` domains and a small mixed-radix product — histogram +
+    cumsum ranks, one tiny ``O(limit)`` survivor sort, zero row sorts;
+  * **entry sort**: position-explicit keys without usable domains — one
+    stable argsort per key over ENTRIES (runs/points), then a cumulative
+    row-count cutoff expands only the winning prefix;
+  * **row-level**: Plain keys (or entry ordering disabled) — the dense
+    rank-key tensor goes through ``dispatch.topk`` (partial-bitonic Pallas
+    kernel on TPU, ``lax.top_k`` otherwise).
+
+Tie semantics everywhere match pandas ``sort_values(kind="stable")``:
+equal keys keep ascending row order, NaN keys rank last in both
+directions (``na_position="last"``).
+
+Distributed ranking (paper §2.1's partitioned scenario): per-partition
+top-k partials merge host-side (``merge_ranked_partials``), and partitions
+whose ORDER-BY-key zone map cannot beat the current k-th best row are
+never transferred — ranked zone-map pruning (partition.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import groupby as groupby_mod
+from repro.core import join as join_mod
+from repro.core import primitives as prim
+from repro.core.compress import next_pow2
+from repro.core.encodings import (
+    IndexColumn,
+    IndexMask,
+    PlainColumn,
+    PlainIndexColumn,
+    RLEColumn,
+    RLEIndexColumn,
+    RLEMask,
+    coverage,
+    decode_column,
+    decode_mask,
+    valid_slots,
+)
+from repro.kernels import dispatch
+
+_I32_MIN = np.iinfo(np.int32).min
+# float32 rank keys (bit-trick below) span [key(-inf), key(+inf)]; the band
+# beneath key(-inf) is free for out-of-band classes:
+_F32_INF_KEY = 0x7F800000
+_NAN_RANK = -_F32_INF_KEY - 2  # strictly below every real float's key
+_INVALID_RANK = _I32_MIN  # strictly below the NaN class
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class OrderedRows:
+    """Device-side ranked-query result: the top-``n`` rows in rank order.
+
+    ``positions[cap]`` are row ids (partition-local under partitioned
+    execution) with sentinel past ``n``; ``columns`` carries the gathered
+    output values (stored/code space) at those rows.
+    """
+
+    positions: jax.Array
+    n: jax.Array
+    columns: Dict[str, jax.Array]
+
+
+@dataclasses.dataclass
+class RankedTable:
+    """Host-side finalized ranked result: exact-size arrays in rank order,
+    dictionary codes decoded back to values."""
+
+    positions: np.ndarray
+    columns: Dict[str, np.ndarray]
+    n: int
+
+
+# ---------------------------------------------------------------------------
+# Rank-key transforms
+# ---------------------------------------------------------------------------
+
+
+def _f32_order_key(v: jax.Array) -> jax.Array:
+    """Total-order-preserving float32 -> int32 bijection (radix-sort trick):
+    ``key(a) < key(b)  <=>  a < b`` for all non-NaN floats, including
+    infinities and signed zeros (-0.0 ranks just below +0.0)."""
+    bits = jax.lax.bitcast_convert_type(v.astype(jnp.float32), jnp.int32)
+    flipped = jnp.bitwise_xor(jnp.bitwise_not(bits), jnp.int32(_I32_MIN))
+    return jnp.where(bits >= 0, bits, flipped)
+
+
+def dense_rank_key(vals: jax.Array, live: jax.Array, descending: bool):
+    """int32 rank keys with LARGER = better (``dispatch.topk`` convention).
+
+    Three totally ordered classes: live non-NaN values (direction applied),
+    then NaN keys (pandas ``na_position='last'``), then dead rows — the
+    float bit-trick leaves the NaN band free, so no live row can collide
+    with either sentinel class. Integer keys use the raw value (flipped by
+    bitwise-not for ascending); a live value at the very edge of int32
+    would tie the dead-row sentinel — the ingest value domain keeps real
+    columns away from those edges (DESIGN.md §3).
+    """
+    if jnp.issubdtype(vals.dtype, jnp.floating):
+        nan = jnp.isnan(vals)
+        key = _f32_order_key(vals)
+        if not descending:
+            key = jnp.bitwise_not(key)
+        key = jnp.where(nan, jnp.int32(_NAN_RANK), key)
+    else:
+        key = vals.astype(jnp.int32)
+        if not descending:
+            key = jnp.bitwise_not(key)
+    return jnp.where(live, key, jnp.int32(_INVALID_RANK))
+
+
+def _argsort_key_nan_last(perm: jax.Array, vals: jax.Array,
+                          descending: bool) -> jax.Array:
+    """Refine ``perm`` by one key: stable directional order with NaN keys
+    strictly last (pandas ``na_position='last'``). Two stacked stable
+    passes — value first, then the NaN flag — so NaNs cannot tie with
+    genuine infinities (mapping NaN onto a +/-inf sentinel would)."""
+    order = jnp.argsort(vals[perm], stable=True, descending=descending)
+    perm = perm[order]
+    if jnp.issubdtype(vals.dtype, jnp.floating):
+        nan_last = jnp.argsort(jnp.isnan(vals[perm]).astype(jnp.int32),
+                               stable=True)
+        perm = perm[nan_last]
+    return perm
+
+
+# ---------------------------------------------------------------------------
+# Top-k row selection
+# ---------------------------------------------------------------------------
+
+
+def _bounded_composite(view, by, descending, key_domains, pol):
+    """Mixed-radix int32 rank code per entry (smaller = better), or None
+    when any key lacks a usable ingest domain (mirrors the sort-free
+    grouping gate, groupby._bounded_key_domain)."""
+    if not key_domains:
+        return None
+    i32 = jnp.iinfo(jnp.int32)
+    total = 1
+    composite = None
+    for name, desc in zip(by, descending):
+        dom = key_domains.get(name)
+        vals = view.values[name]
+        if dom is None or not jnp.issubdtype(vals.dtype, jnp.integer):
+            return None
+        lo, size = int(dom[0]), int(dom[1])
+        if lo < i32.min or lo + size - 1 > i32.max or size <= 0:
+            return None
+        total *= size
+        if total > pol.sort_free_max_domain:
+            return None
+        code = vals.astype(jnp.int32) - jnp.asarray(lo, jnp.int32)
+        if desc:
+            code = jnp.asarray(size - 1, jnp.int32) - code
+        composite = code if composite is None else composite * size + code
+    return composite, total
+
+
+def _entry_perm(view, by, descending):
+    """Entry permutation in rank order: one stable argsort per key, least
+    significant first (iterated stable sorts == lexicographic order); the
+    entry buffers are position-sorted, so ties keep ascending row order."""
+    perm = jnp.arange(view.starts.shape[0], dtype=jnp.int32)
+    for name, desc in reversed(list(zip(by, descending))):
+        perm = _argsort_key_nan_last(perm, view.values[name], desc)
+    return perm
+
+
+def _expand_prefix(starts, takes, cap_k, nrows):
+    """Expand per-entry row quotas (entries already in rank order) into the
+    output position list."""
+    pos, _, pvalid, total = prim.range_arange_capped(starts, takes, cap_k)
+    positions = jnp.where(pvalid, pos, jnp.asarray(nrows, pos.dtype))
+    return positions, total.astype(jnp.int32)
+
+
+def top_k_rows(cols: Dict[str, object], by: Sequence[str],
+               descending: Sequence[bool], limit: int, mask=None,
+               key_domains: Optional[Dict[str, Tuple[int, int]]] = None):
+    """Positions of the top-``limit`` live rows under the multi-key order.
+
+    Returns ``(positions[cap_k], n)`` with ``cap_k = next_pow2(limit)``:
+    positions in rank order (sentinel ``nrows`` past ``n``),
+    ``n = min(limit, live rows)``. ``mask`` carries pipeline liveness;
+    ``key_domains`` (ingest ``(lo, size)`` metadata) unlocks the
+    histogram-rank path.
+    """
+    by = list(by)
+    descending = list(descending)
+    nrows = cols[by[0]].nrows
+    limit_n = max(1, min(int(limit), nrows)) if nrows else 1
+    cap_k = next_pow2(limit_n, 8)
+    pol = dispatch.policy()
+
+    entry_ok = (pol.enable_entry_order
+                and all(isinstance(cols[b], (RLEColumn, IndexColumn))
+                        for b in by)
+                and (mask is None or isinstance(mask, (RLEMask, IndexMask))))
+
+    if not entry_ok:
+        # row-level: decode keys (the paper's baseline granularity)
+        if len(by) == 1:
+            col = cols[by[0]]
+            live = coverage(col)
+            if mask is not None:
+                live = live & decode_mask(mask)
+            key = dense_rank_key(decode_column(col), live, descending[0])
+            kk = min(cap_k, nrows) if nrows else 1
+            _, ridx = dispatch.topk(key, kk)
+            n = jnp.minimum(jnp.asarray(limit_n, jnp.int32),
+                            jnp.sum(live).astype(jnp.int32))
+            positions = jnp.where(jnp.arange(kk) < n,
+                                  ridx.astype(jnp.int32),
+                                  jnp.asarray(nrows, jnp.int32))
+            if kk < cap_k:
+                positions = jnp.concatenate(
+                    [positions, jnp.full((cap_k - kk,), nrows, jnp.int32)])
+            return positions, n
+        plain = {b: PlainColumn(values=decode_column(cols[b]),
+                                nrows=cols[b].nrows) for b in by}
+        view = groupby_mod.align_columns(plain, mask=mask)
+    else:
+        view = groupby_mod.align_columns({b: cols[b] for b in by}, mask=mask)
+
+    bounded = None if not entry_ok else _bounded_composite(
+        view, by, descending, key_domains, pol)
+    if bounded is not None:
+        composite, domain = bounded
+        take, total = prim.rank_select_bounded(
+            composite, view.lengths, view.valid, domain, limit_n)
+        # <= limit_n entries carry a nonzero take (rank_select_bounded's
+        # contract), so the survivor compaction can never overflow
+        cap_s = next_pow2(limit_n, 8)
+        (code_s, start_s, take_s), _ = prim.compact(
+            take > 0, (composite, view.starts, take), cap_s,
+            (domain, nrows, 0))
+        order = jnp.argsort(code_s, stable=True)  # tiny: O(limit) entries
+        positions, _ = _expand_prefix(start_s[order], take_s[order],
+                                      cap_k, nrows)
+        return positions, total
+
+    perm = _entry_perm(view, by, descending)
+    lens = view.lengths[perm].astype(jnp.int32)
+    rows_before = jnp.cumsum(lens) - lens
+    take = jnp.clip(jnp.asarray(limit_n, jnp.int32) - rows_before, 0, lens)
+    return _expand_prefix(view.starts[perm], take, cap_k, nrows)
+
+
+def gather_at(col, positions: jax.Array, n: jax.Array) -> jax.Array:
+    """Fetch a column's values at ranked row positions (k-sized output;
+    composite encodings decode first — the output is row-granular anyway)."""
+    if isinstance(col, (PlainIndexColumn, RLEIndexColumn)):
+        col = PlainColumn(values=decode_column(col), nrows=col.nrows)
+    valid = valid_slots(n, positions.shape[0])
+    return join_mod.gather_rows(col, positions, valid)
+
+
+# ---------------------------------------------------------------------------
+# Ordering a group-by result (ORDER BY over aggregate outputs / group keys)
+# ---------------------------------------------------------------------------
+
+
+def rank_groupby(res, by: Sequence[str], descending: Sequence[bool],
+                 limit: Optional[int]):
+    """Reorder a ``GroupByResult``'s slots by group keys and/or aggregate
+    outputs, keeping the first ``limit`` groups. Group slots are already in
+    lexicographic key order, so ties fall back to key order — matching a
+    pandas ``groupby().agg().sort_values(kind="stable")`` oracle."""
+    cap = res.valid.shape[0]
+    arrays = {**res.keys, **res.aggs}
+    missing = [b for b in by if b not in arrays]
+    if missing:
+        raise KeyError(f"order_by after groupby: {missing!r} name neither a "
+                       "group key nor an aggregate output")
+    perm = jnp.arange(cap, dtype=jnp.int32)
+    for name, desc in reversed(list(zip(by, descending))):
+        perm = _argsort_key_nan_last(perm, arrays[name], desc)
+    # most-significant pass: valid groups first (stable)
+    order = jnp.argsort(jnp.where(res.valid[perm], 0, 1).astype(jnp.int32),
+                        stable=True)
+    perm = perm[order]
+    ng = res.num_groups if limit is None else jnp.minimum(
+        res.num_groups, jnp.asarray(int(limit), jnp.int32))
+    gvalid = jnp.arange(cap) < ng
+    reorder = lambda v: jnp.where(gvalid, v[perm], jnp.asarray(0, v.dtype))
+    return groupby_mod.GroupByResult(
+        keys={k: reorder(v) for k, v in res.keys.items()},
+        aggs={k: reorder(v) for k, v in res.aggs.items()},
+        num_groups=ng, valid=gvalid)
+
+
+# ---------------------------------------------------------------------------
+# Host-side distributed merge (partitioned execution, DESIGN.md §4/§10)
+# ---------------------------------------------------------------------------
+
+
+def _np_sort_key(v: np.ndarray, descending: bool) -> np.ndarray:
+    """np.lexsort key with direction applied; NaN sorts last either way
+    (negating a float keeps NaN in place under numpy's NaN-last sorts)."""
+    v = np.asarray(v)
+    if not descending:
+        return v
+    if v.dtype.kind == "f":
+        return -v
+    return -v.astype(np.int64)
+
+
+def host_block(res: OrderedRows, row_offset: int = 0):
+    """Bring one partition's ranked partial to the host: exact-size arrays,
+    positions globalized by the partition's row offset."""
+    n = int(res.n)
+    return {
+        "positions": np.asarray(res.positions)[:n].astype(np.int64)
+        + row_offset,
+        "columns": {k: np.asarray(v)[:n] for k, v in res.columns.items()},
+    }
+
+
+def merge_ranked_partials(state, block, by: Sequence[str],
+                          descending: Sequence[bool], limit: Optional[int]):
+    """Classic distributed top-k merge: fold one partition's top-k partial
+    into the running candidate set and re-truncate to ``limit``.
+
+    Correctness: the global top-k is contained in the union of per-
+    partition top-k's, so merging partials in ANY partition order yields
+    the exact result; ties across partitions resolve by global row id
+    (the single-table stable order).
+    """
+    if state is None:
+        merged = block
+    else:
+        merged = {
+            "positions": np.concatenate([state["positions"],
+                                         block["positions"]]),
+            "columns": {k: np.concatenate([state["columns"][k],
+                                           block["columns"][k]])
+                        for k in state["columns"]},
+        }
+    keys = tuple(_np_sort_key(merged["columns"][b], d)
+                 for b, d in zip(by, descending))
+    order = np.lexsort((merged["positions"],) + tuple(reversed(keys)))
+    if limit is not None:
+        order = order[:int(limit)]
+    return {
+        "positions": merged["positions"][order],
+        "columns": {k: v[order] for k, v in merged["columns"].items()},
+    }
+
+
+def ranked_table_from_state(state, dictionaries: Dict[str, np.ndarray]):
+    """Finalize a merged candidate state: decode dictionary codes."""
+    cols = {}
+    for name, vals in state["columns"].items():
+        d = dictionaries.get(name)
+        if d is not None and len(d):
+            codes = np.clip(np.asarray(vals, np.int64), 0, len(d) - 1)
+            cols[name] = d[codes]
+        else:
+            cols[name] = vals
+    return RankedTable(positions=state["positions"], columns=cols,
+                       n=len(state["positions"]))
+
+
+def rank_merged_groupby(merged, by: Sequence[str],
+                        descending: Sequence[bool], limit: Optional[int]):
+    """Order a host-merged ``MergedGroupBy`` (partitioned group-by) by
+    group keys / aggregate outputs; ties keep lexicographic key order
+    (np.lexsort is stable)."""
+    arrays = {**merged.keys, **merged.aggs}
+    missing = [b for b in by if b not in arrays]
+    if missing:
+        raise KeyError(f"order_by after groupby: {missing!r} name neither a "
+                       "group key nor an aggregate output")
+    keys = tuple(_np_sort_key(arrays[b], d) for b, d in zip(by, descending))
+    order = np.lexsort(tuple(reversed(keys))) if keys else np.arange(
+        merged.num_groups)
+    if limit is not None:
+        order = order[:int(limit)]
+    return groupby_mod.MergedGroupBy(
+        keys={g: np.asarray(v)[order] for g, v in merged.keys.items()},
+        aggs={a: np.asarray(v)[order] for a, v in merged.aggs.items()},
+        num_groups=len(order))

@@ -30,6 +30,7 @@ import jax
 import numpy as np
 
 from repro.core import compress, groupby
+from repro.core import order as order_mod
 from repro.core import plan as plan_mod
 from repro.core.encodings import make_rle_mask
 from repro.core.plan import (
@@ -43,8 +44,10 @@ from repro.core.plan import (
     _FilterOp,
     _JoinOp,
     _MapOp,
+    _OrderByOp,
     _SemiJoinOp,
 )
+from repro.core import table as table_mod
 from repro.core.table import Table, dictionary_pass
 
 # Host->device transfer entry point; module-level so tests can stub it to
@@ -181,14 +184,9 @@ class PartitionedTable:
                 return p.table.encoding_of(name)
         return "PlainColumn"
 
-    def code_for(self, name: str, value):
-        if name not in self.dictionaries:
-            return value
-        d = self.dictionaries[name]
-        idx = np.searchsorted(d, value)
-        if idx >= len(d) or d[idx] != value:
-            return -1
-        return int(idx)
+    def code_for(self, name: str, value, op: str = "eq"):
+        return table_mod.dictionary_code_for(self.dictionaries, name, value,
+                                             op)
 
     # -- inspection ----------------------------------------------------------
 
@@ -253,8 +251,24 @@ def rows_for_budget(data: Dict[str, np.ndarray], budget_bytes: int) -> int:
 
 def _lit(table, name, op, value):
     if isinstance(value, str):
-        return table.code_for(name, value) if op in ("eq", "ne", "isin") else None
+        # equality AND range literals translate to the dictionary's code
+        # space (range ops via the searchsorted boundary code, preserving
+        # operator semantics — Table.code_for), so zone maps recorded on
+        # codes prune string predicates of every comparison shape
+        if op in ("eq", "ne", "isin", "lt", "le", "gt", "ge"):
+            return table.code_for(name, value, op)
+        return None
     return value
+
+
+def _range_bounds(table, expr: RangePred):
+    """RangePred bounds in the column's stored (code) space."""
+    lo, hi = expr.lo, expr.hi
+    if isinstance(lo, str):
+        lo = table.code_for(expr.col, lo, "ge" if expr.lo_incl else "gt")
+    if isinstance(hi, str):
+        hi = table.code_for(expr.col, hi, "le" if expr.hi_incl else "lt")
+    return lo, hi
 
 
 def _maybe_any(expr, zl: Dict[str, float], zh: Dict[str, float],
@@ -280,8 +294,9 @@ def _maybe_any(expr, zl: Dict[str, float], zh: Dict[str, float],
         lo, hi = zl[expr.col], zh[expr.col]
         if lo > hi:
             return False
-        above = hi > expr.lo if not expr.lo_incl else hi >= expr.lo
-        below = lo < expr.hi if not expr.hi_incl else lo <= expr.hi
+        rlo, rhi = _range_bounds(table, expr)
+        above = hi > rlo if not expr.lo_incl else hi >= rlo
+        below = lo < rhi if not expr.hi_incl else lo <= rhi
         return above and below
     if isinstance(expr, And):
         return _maybe_any(expr.a, zl, zh, table) and _maybe_any(expr.b, zl, zh, table)
@@ -315,8 +330,9 @@ def _definitely_all(expr, zl: Dict[str, float], zh: Dict[str, float],
         lo, hi = zl[expr.col], zh[expr.col]
         if lo > hi:
             return True
-        above = lo > expr.lo if not expr.lo_incl else lo >= expr.lo
-        below = hi < expr.hi if not expr.hi_incl else hi <= expr.hi
+        rlo, rhi = _range_bounds(table, expr)
+        above = lo > rlo if not expr.lo_incl else lo >= rlo
+        below = hi < rhi if not expr.hi_incl else hi <= rhi
         return above and below
     if isinstance(expr, And):
         return (_definitely_all(expr.a, zl, zh, table)
@@ -383,17 +399,24 @@ class PartitionedQuery(Query):
     prepared once and broadcast to every partition's program invocation),
     streaming partial-aggregate execution.
 
-    The pipeline must terminate in ``aggregate`` or ``groupby`` (partials of
-    a bare filter are the per-partition masks, which have no merge story —
-    count them instead). One jitted program serves every partition; the jit
-    cache keys on the partition's (bucketed) column structure, and
-    ``trace_count`` exposes how many distinct programs were actually traced.
+    The pipeline must terminate in ``aggregate``, ``groupby`` or
+    ``order_by`` (partials of a bare filter are the per-partition masks,
+    which have no merge story — count them instead). One jitted program
+    serves every partition; the jit cache keys on the partition's
+    (bucketed) column structure, and ``trace_count`` exposes how many
+    distinct programs were actually traced. Ranked terminals run the
+    distributed top-k merge with ranked zone-map pruning (DESIGN.md §10).
     """
 
     def __init__(self, table: PartitionedTable):
         super().__init__(table)
         self.trace_count = 0
         self.last_stats: Dict[str, int] = {}
+        # ranked zone-map pruning (DESIGN.md §10): once `limit` candidate
+        # rows are held, partitions whose ORDER-BY-key zone map cannot beat
+        # the current k-th best are never transferred. Off switch exists
+        # for benchmarking the transfer-count win (bench_orderby.py).
+        self.ranked_pruning = True
 
     def _base_mask(self, part: Partition):
         # One-run RLE mask over the valid rows; bounds are traced values, so
@@ -412,11 +435,12 @@ class PartitionedQuery(Query):
 
     def run(self, jit: bool = True):
         terminal = self.terminal_op()
-        if terminal is None:
+        oop = self.order_op()
+        if terminal is None and oop is None:
             raise NotImplementedError(
-                "partitioned execution requires a terminal aggregate() or "
-                "groupby() (add e.g. a count aggregate to materialize a "
-                "filter result)")
+                "partitioned execution requires a terminal aggregate() / "
+                "groupby() / order_by() (add e.g. a count aggregate to "
+                "materialize a filter result)")
         # preparation FIRST: join prep records host_keys on each _JoinOp,
         # which partition_can_match's FK zone-map pushdown reads below
         key_sets = tuple(self._prepare_inputs())
@@ -435,6 +459,11 @@ class PartitionedQuery(Query):
             "executed": len(todo),
             "skipped": len(ptable.partitions) - len(todo),
         }
+        if terminal is None:
+            # row-terminal ranked query: distributed top-k merge with
+            # ranked zone-map pruning (sequential by design — each merge
+            # tightens the bound the NEXT skip decision needs)
+            return self._run_ranked(oop, execute, key_sets, todo)
 
         partials = []
         # Double buffering: dispatch the device_put of partition k+1 before
@@ -451,5 +480,79 @@ class PartitionedQuery(Query):
         if isinstance(terminal, _AggOp):
             return plan_mod.merge_scalar_partials(partials, terminal.specs,
                                                   col_dtypes=ptable.col_dtypes)
-        return groupby.merge_groupby_partials(partials, list(terminal.group),
-                                              terminal.specs)
+        merged = groupby.merge_groupby_partials(partials,
+                                                list(terminal.group),
+                                                terminal.specs)
+        if oop is not None:
+            # groupby + order_by: partials carry PARTIAL aggregates, so
+            # ranking can only happen after the host merge finalizes them
+            merged = order_mod.rank_merged_groupby(merged, oop.by,
+                                                   oop.descending, oop.limit)
+        return merged
+
+    # -- ranked (ORDER BY / TOP-K) execution --------------------------------
+
+    def _rebound(self, name: str) -> bool:
+        """Was ``name`` rebound by a map/join before the order op? (Its
+        ingest zone maps then no longer describe the pipeline values.)"""
+        for op in self.ops:
+            if isinstance(op, _MapOp) and op.out == name:
+                return True
+            if isinstance(op, _JoinOp) and name in op.out:
+                return True
+            if isinstance(op, _OrderByOp):
+                return False
+        return False
+
+    def _run_ranked(self, oop: _OrderByOp, execute, key_sets, todo):
+        ptable: PartitionedTable = self.table
+        key0, desc0 = oop.by[0], oop.descending[0]
+        prunable = (self.ranked_pruning and oop.limit is not None
+                    and not self._rebound(key0))
+
+        def zone_best(part):
+            """Best rank the partition could possibly hold on the primary
+            key (None = unknown: process early, never prune)."""
+            z = part.zone_hi if desc0 else part.zone_lo
+            if key0 not in z:
+                return None
+            return z[key0] if desc0 else -z[key0]
+
+        # visit best-first: a good bound forms after the first partition,
+        # maximizing later skips (unknown-zone partitions go first — they
+        # can never be skipped, so they might as well seed the bound)
+        order = sorted(range(len(todo)), key=lambda i: (
+            0 if zone_best(todo[i]) is None else 1,
+            0 if zone_best(todo[i]) is None else -zone_best(todo[i])))
+
+        state = None
+        ranked_skipped = 0
+        executed = 0
+        for i in order:
+            part = todo[i]
+            if (prunable and state is not None
+                    and len(state["positions"]) >= oop.limit):
+                zb = zone_best(part)
+                kth = state["columns"][key0][-1]  # current k-th best
+                bound = kth if desc0 else -kth
+                # strictly-worse partitions cannot contribute (a tie could:
+                # its row might win the ascending-row-id tiebreak)
+                if zb is not None and zb < bound:
+                    ranked_skipped += 1
+                    continue
+            cols = device_put(part.table.columns)
+            executed += 1
+            res = execute(cols, key_sets, self._base_mask(part))
+            block = order_mod.host_block(res, row_offset=part.row_offset)
+            state = order_mod.merge_ranked_partials(
+                state, block, oop.by, oop.descending, oop.limit)
+        self.last_stats["executed"] = executed
+        self.last_stats["ranked_skipped"] = ranked_skipped
+        if state is None:  # every partition pruned: empty ranked result
+            names = plan_mod._order_output_cols(self.ops, ptable) or ()
+            state = {"positions": np.zeros((0,), np.int64),
+                     "columns": {n: np.zeros(
+                         (0,), ptable.col_dtypes.get(n, np.float32))
+                         for n in names}}
+        return order_mod.ranked_table_from_state(
+            state, self._ranked_dictionaries())

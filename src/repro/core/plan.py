@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import arithmetic, compress, groupby, join as join_mod, logical
+from repro.core import order as order_mod
 from repro.core.encodings import (
     IndexColumn,
     PlainColumn,
@@ -167,8 +168,15 @@ def eval_predicate(expr, columns: Dict[str, object], table: Optional[Table] = No
     if isinstance(expr, Pred):
         c = columns[expr.col]
         lit = expr.literal
-        if table is not None and expr.op in ("eq", "ne") and isinstance(lit, str):
-            lit = table.code_for(expr.col, lit)
+        if (table is not None and isinstance(lit, str)
+                and expr.op in ("eq", "ne", "lt", "le", "gt", "ge")):
+            # dictionary pushdown: equality literals map to their exact
+            # code; range literals map to a searchsorted BOUNDARY code in
+            # the (sorted) dictionary's code space, preserving the
+            # comparison's semantics whether or not the literal is present
+            # (Table.code_for's exact/non-exact handling) — string-range
+            # predicates never decode the column.
+            lit = table.code_for(expr.col, lit, expr.op)
         if expr.op == "isin":
             lits = [table.code_for(expr.col, v) if (table and isinstance(v, str)) else v
                     for v in lit]
@@ -178,7 +186,12 @@ def eval_predicate(expr, columns: Dict[str, object], table: Optional[Table] = No
             return m
         return arithmetic.compare(c, expr.op, lit)
     if isinstance(expr, RangePred):
-        return arithmetic.compare_range(columns[expr.col], expr.lo, expr.hi,
+        lo, hi = expr.lo, expr.hi
+        if table is not None and isinstance(lo, str):
+            lo = table.code_for(expr.col, lo, "ge" if expr.lo_incl else "gt")
+        if table is not None and isinstance(hi, str):
+            hi = table.code_for(expr.col, hi, "le" if expr.hi_incl else "lt")
+        return arithmetic.compare_range(columns[expr.col], lo, hi,
                                         expr.lo_incl, expr.hi_incl)
     if isinstance(expr, And):
         return logical.and_masks(eval_predicate(expr.a, columns, table),
@@ -242,6 +255,23 @@ class _MapOp:
     fn: object  # columns dict -> column
 
 
+@dataclasses.dataclass
+class _OrderByOp:
+    """Terminal ranking: ORDER BY ``by`` (with per-key direction), keep the
+    first ``limit`` rows/groups (DESIGN.md §10).
+
+    As the pipeline's terminal over rows it ranks surviving rows and
+    gathers ``cols`` (default: every pipeline column) at the winners;
+    staged directly after a ``groupby`` it ranks the group slots by group
+    keys and/or aggregate outputs instead.
+    """
+
+    by: Tuple[str, ...]
+    descending: Tuple[bool, ...]
+    limit: Optional[int]
+    cols: Optional[Tuple[str, ...]] = None
+
+
 class _SchemaView:
     """Layered name resolution over a staged pipeline.
 
@@ -290,13 +320,13 @@ class _SchemaView:
         except KeyError:
             return "PlainColumn"
 
-    def code_for(self, name: str, value):
+    def code_for(self, name: str, value, op: str = "eq"):
         if name in self._joined:
             dim, dim_col, _ = self._joined[name]
-            return dim.code_for(dim_col, value)
+            return dim.code_for(dim_col, value, op)
         if name in self._mapped:
             return value
-        return self._table.code_for(name, value)
+        return self._table.code_for(name, value, op)
 
 
 class Query:
@@ -369,6 +399,53 @@ class Query:
         self.ops.append(_AggOp(specs))
         return self
 
+    def order_by(self, by, descending=False, limit: Optional[int] = None,
+                 cols: Optional[Sequence[str]] = None) -> "Query":
+        """Stage a terminal ORDER BY / TOP-K / LIMIT (DESIGN.md §10).
+
+        ``by``: column name or sequence of names; ``descending``: bool or
+        per-key sequence. Over rows, the result is the first ``limit``
+        surviving rows in rank order with ``cols`` (default: all pipeline
+        columns) gathered at them — ``run()`` returns a host-side
+        ``RankedTable`` with dictionary codes decoded. Staged after
+        ``groupby``, ``by`` names group keys and/or aggregate outputs and
+        the group slots are ranked instead. Ties keep ascending row order
+        and NaN keys rank last, matching pandas
+        ``sort_values(kind="stable")``.
+        """
+        by = (by,) if isinstance(by, str) else tuple(by)
+        if not by:
+            raise ValueError("order_by: need at least one key")
+        if isinstance(descending, bool):
+            desc = (descending,) * len(by)
+        else:
+            desc = tuple(bool(d) for d in descending)
+        if len(desc) != len(by):
+            raise ValueError("order_by: descending must be a bool or match "
+                             f"the {len(by)} keys")
+        if limit is not None and int(limit) < 1:
+            raise ValueError("order_by: limit must be >= 1")
+        if any(isinstance(op, _OrderByOp) for op in self.ops):
+            raise ValueError("order_by: already staged")
+        if any(isinstance(op, _AggOp) for op in self.ops):
+            raise ValueError("order_by: cannot order a scalar aggregate")
+        gops = [op for op in self.ops if isinstance(op, _GroupByOp)]
+        if gops:
+            known = set(gops[-1].group) | {o for o, _, _ in gops[-1].specs}
+            missing = [b for b in by if b not in known]
+            if missing:
+                raise KeyError(
+                    f"order_by after groupby: {missing!r} neither group "
+                    "keys nor aggregate outputs")
+            if cols is not None:
+                raise ValueError("order_by after groupby: the output is the "
+                                 "ranked group table; cols= does not apply")
+        self.ops.append(_OrderByOp(
+            by=by, descending=desc,
+            limit=None if limit is None else int(limit),
+            cols=None if cols is None else tuple(cols)))
+        return self
+
     # -- execution ----------------------------------------------------------
 
     def _reorder_semijoins(self):
@@ -404,10 +481,15 @@ class Query:
         """
         self._reorder_semijoins()
         ops = list(self.ops)
+        for i, op in enumerate(ops):
+            if isinstance(op, _OrderByOp) and i != len(ops) - 1:
+                raise ValueError("order_by must be the pipeline's last op")
         if partial:
             ops = [_decompose_op(op) for op in ops]
         table = self.table
         key_domains = _groupby_key_domains(ops, table)
+        order_domains = _order_key_domains(ops, table)
+        order_cols = _order_output_cols(ops, table)
         # positional schema snapshots: each filter resolves names/literals
         # against the pipeline state AT ITS POSITION (a later join may
         # rebind a column to the dimension's code space)
@@ -443,9 +525,30 @@ class Query:
                 elif isinstance(op, _GroupByOp):
                     needed = set(op.group) | {c for _, _, c in op.specs if c}
                     sub = {k: env[k] for k in needed}
-                    return groupby.groupby_aggregate(
+                    res = groupby.groupby_aggregate(
                         sub, op.group, op.specs, op.num_groups_cap, mask=mask,
                         key_domains=key_domains)
+                    nxt = ops[i + 1] if i + 1 < len(ops) else None
+                    if isinstance(nxt, _OrderByOp) and not partial:
+                        # rank the group slots; under partial (partitioned)
+                        # execution ranking happens AFTER the host merge —
+                        # per-partition partial aggregates have no rank yet
+                        res = order_mod.rank_groupby(res, nxt.by,
+                                                     nxt.descending, nxt.limit)
+                    return res
+                elif isinstance(op, _OrderByOp):
+                    # terminal ranked query over rows: rank, then gather
+                    # the output columns at the k winners only
+                    nrows_here = next(iter(env.values())).nrows
+                    limit = op.limit if op.limit is not None else nrows_here
+                    positions, n = order_mod.top_k_rows(
+                        {b: env[b] for b in op.by}, op.by, op.descending,
+                        limit, mask=mask, key_domains=order_domains)
+                    gathered = {name: order_mod.gather_at(env[name],
+                                                          positions, n)
+                                for name in order_cols}
+                    return order_mod.OrderedRows(positions=positions, n=n,
+                                                 columns=gathered)
                 elif isinstance(op, _AggOp):
                     needed = {c for _, _, c in op.specs if c}
                     out = {}
@@ -475,20 +578,50 @@ class Query:
                 return op
         return None
 
+    def order_op(self):
+        """The staged _OrderByOp, or None."""
+        for op in self.ops:
+            if isinstance(op, _OrderByOp):
+                return op
+        return None
+
+    def _ranked_dictionaries(self) -> Dict[str, np.ndarray]:
+        """name -> dictionary for decoding a ranked result's columns: base
+        columns use the (fact) table's dictionaries; join-gathered columns
+        the DIMENSION's; map outputs none."""
+        dicts = dict(getattr(self.table, "dictionaries", None) or {})
+        for op in self.ops:
+            if isinstance(op, _JoinOp):
+                for out, c in zip(op.out, op.cols):
+                    dicts.pop(out, None)
+                    d = (getattr(op.dim, "dictionaries", None) or {}).get(c)
+                    if d is not None:
+                        dicts[out] = d
+            elif isinstance(op, _MapOp):
+                dicts.pop(op.out, None)
+        return dicts
+
     def run(self, jit: bool = True):
         """Execute: eager key-set/dimension preparation + ONE jitted fact
         pipeline.
 
         The jitted program is memoized on the Query: repeated ``run()``
         calls (warm queries, the paper's measurement mode §9) re-execute
-        the compiled program without retracing.
+        the compiled program without retracing. A row-terminal ``order_by``
+        finalizes host-side into a ``RankedTable`` (exact-size arrays,
+        dictionary codes decoded).
         """
         key_sets = tuple(self._prepare_inputs())
         if not jit:
-            return self.build()(self.table.columns, key_sets)
-        if getattr(self, "_jitted", None) is None:
-            self._jitted = jax.jit(self.build())
-        return self._jitted(self.table.columns, key_sets)
+            out = self.build()(self.table.columns, key_sets)
+        else:
+            if getattr(self, "_jitted", None) is None:
+                self._jitted = jax.jit(self.build())
+            out = self._jitted(self.table.columns, key_sets)
+        if isinstance(out, order_mod.OrderedRows):
+            return order_mod.ranked_table_from_state(
+                order_mod.host_block(out), self._ranked_dictionaries())
+        return out
 
     def _prepare_inputs(self):
         """Eager host-side preparation, one entry per semi-join / join op in
@@ -587,32 +720,75 @@ class Query:
                 {c: jnp.asarray(v) for c, v in pay_p.items()})
 
 
-def _groupby_key_domains(ops, table):
-    """Bounded-domain metadata (name -> (lo, size)) for the terminal
-    group-by's key columns, from ``table.domains`` (ingest-recorded).
+def _live_domains_at(ops, table, stop_type):
+    """Walk ``ops`` maintaining live ingest domains up to the first
+    ``stop_type`` op; returns (op, live domains) or (None, None).
 
     Walked in pipeline order, like zone maps in partition_can_match: a
-    ``map`` rebinding a column name invalidates its domain for the
-    group-by (the recorded bounds describe the ORIGINAL values, and a
-    stale domain would silently drop out-of-range groups on the sort-free
-    path)."""
+    ``map`` rebinding a column name invalidates its domain (the recorded
+    bounds describe the ORIGINAL values, and a stale domain would
+    silently drop out-of-range keys on the sort-free / histogram-rank
+    paths), while join-gathered attributes carry the DIMENSION's ingest
+    domain (global dictionary code space / integer bounds)."""
     live = dict(getattr(table, "domains", None) or {})
     for op in ops:
         if isinstance(op, _MapOp):
             live.pop(op.out, None)
         elif isinstance(op, _JoinOp):
-            # gathered dimension attributes carry the DIMENSION's ingest
-            # domain (global dictionary code space / integer bounds), so a
-            # group-by on them can still take the sort-free path
             for out, c in zip(op.out, op.cols):
                 live.pop(out, None)
                 dom = (getattr(op.dim, "domains", None) or {}).get(c)
                 if dom is not None:
                     live[out] = dom
-        elif isinstance(op, _GroupByOp):
-            doms = {g: live[g] for g in op.group if g in live}
-            return doms or None
-    return None
+        elif isinstance(op, stop_type):
+            return op, live
+    return None, None
+
+
+def _groupby_key_domains(ops, table):
+    """Bounded-domain metadata (name -> (lo, size)) for the terminal
+    group-by's key columns, from ``table.domains`` (ingest-recorded) —
+    the sort-free grouping contract (see ``_live_domains_at``)."""
+    op, live = _live_domains_at(ops, table, _GroupByOp)
+    if op is None:
+        return None
+    doms = {g: live[g] for g in op.group if g in live}
+    return doms or None
+
+
+def _order_key_domains(ops, table):
+    """Bounded-domain metadata for a row-terminal order_by's keys — the
+    histogram-rank path's contract (order.top_k_rows), with the same
+    pipeline-order invalidation as the group-by domains."""
+    op, live = _live_domains_at(ops, table, _OrderByOp)
+    if op is None or any(isinstance(o, _GroupByOp) for o in ops):
+        return None
+    doms = {b: live[b] for b in op.by if b in live}
+    return doms or None
+
+
+def _table_column_names(table) -> Tuple[str, ...]:
+    cols = getattr(table, "columns", None)
+    if cols is not None:
+        return tuple(cols)
+    return tuple(getattr(table, "col_dtypes", {}))  # PartitionedTable
+
+
+def _order_output_cols(ops, table):
+    """Output column set of a row-terminal order_by: the staged ``cols``
+    or every name live in the pipeline at that point."""
+    oop = next((op for op in ops if isinstance(op, _OrderByOp)), None)
+    if oop is None or any(isinstance(op, _GroupByOp) for op in ops):
+        return None
+    if oop.cols is not None:
+        return tuple(dict.fromkeys(oop.cols + oop.by))
+    names = list(_table_column_names(table))
+    for op in ops:
+        if isinstance(op, _JoinOp):
+            names.extend(n for n in op.out if n not in names)
+        elif isinstance(op, _MapOp) and op.out not in names:
+            names.append(op.out)
+    return tuple(names)
 
 
 # ----------------------- partial-aggregate decomposition -------------------

@@ -133,6 +133,48 @@ def unique_bounded(values: jax.Array, valid: jax.Array, domain_size: int,
     return uniques, inverse, num_groups
 
 
+def rank_select_bounded(codes: jax.Array, lengths: jax.Array, valid: jax.Array,
+                        domain_size: int, limit: int):
+    """Sort-free top-``limit`` ROW selection over entries with bounded rank
+    codes (the ordering subsystem's dense-domain trick, DESIGN.md §10).
+
+    ``codes`` are int32 per-entry rank keys in ``[0, domain_size)`` with
+    SMALLER = better (direction flips are the caller's job); ``lengths`` is
+    rows per entry (run lengths — 1 for points/rows), ``valid`` masks
+    entries out. The comparison sort of a row-level top-k is replaced by
+
+      1. a presence histogram of live row counts per code (one scatter-add
+         of run lengths — O(E + D)),
+      2. a cumulative sum over the domain: ``rows_with_code_below[c]``,
+      3. the boundary code c* = the ``limit``-th best row's code (one
+         searchsorted into the cumsum), and
+      4. ONE O(E) prefix sum over the boundary code's entries to split the
+         quota left at c* among them in position (stable) order.
+
+    Returns ``(take, total)``: ``take[i]`` rows of entry ``i`` belong to
+    the top-``limit`` (its first ``take[i]`` rows, since same-code entries
+    rank in position order), ``total = min(limit, live rows)``. Entries
+    with code < c* always have ``take == length``, so
+    ``sum(take) == total`` and at most ``total`` entries have a nonzero
+    take — a compaction to ``next_pow2(limit)`` slots can never overflow.
+    """
+    lens = jnp.where(valid, lengths, 0).astype(jnp.int32)
+    v = jnp.where(valid & (lens > 0), codes.astype(jnp.int32), domain_size)
+    hist = jnp.zeros((domain_size,), jnp.int32).at[v].add(lens, mode="drop")
+    csum = jnp.cumsum(hist)  # inclusive: rows with code <= c
+    total = jnp.minimum(jnp.asarray(limit, jnp.int32), csum[domain_size - 1])
+    cstar = jnp.searchsorted(csum, total, side="left").astype(jnp.int32)
+    excl = csum - hist  # rows with code < c
+    rows_before_code = excl[jnp.clip(v, 0, domain_size - 1)]
+    at_boundary = v == cstar
+    b_lens = jnp.where(at_boundary, lens, 0)
+    within = jnp.cumsum(b_lens) - b_lens  # boundary rows before this entry
+    quota = total - rows_before_code - within
+    take = jnp.where(v < cstar, lens,
+                     jnp.where(at_boundary, jnp.clip(quota, 0, lens), 0))
+    return take, total
+
+
 # ---------------------------------------------------------------------------
 # range_intersect (Algorithm 1) — the workhorse
 # ---------------------------------------------------------------------------

@@ -41,6 +41,34 @@ def dictionary_pass(data: Dict[str, np.ndarray]):
     return out, dicts
 
 
+def dictionary_code_for(dictionaries: Dict[str, np.ndarray], name: str,
+                        value, op: str = "eq"):
+    """Shared literal -> code translation (Table / PartitionedTable).
+
+    See ``Table.code_for``. Boundary mapping for range ops (``idx`` =
+    ``searchsorted(dict, value)``, ``exact`` = literal present):
+
+      * ``lt``: codes <  idx          * ``ge``: codes >= idx
+      * ``le``: codes <= idx (exact) / idx-1 (absent)
+      * ``gt``: codes >  idx (exact) / idx-1 (absent)
+
+    each preserving the original operator, so callers substitute the code
+    for the literal and change nothing else.
+    """
+    if name not in dictionaries:
+        return value
+    d = dictionaries[name]
+    idx = int(np.searchsorted(d, value))
+    exact = idx < len(d) and d[idx] == value
+    if op in ("eq", "ne", "isin"):
+        return idx if exact else -1
+    if op in ("lt", "ge"):
+        return idx
+    if op in ("le", "gt"):
+        return idx if exact else idx - 1
+    raise ValueError(f"code_for: unsupported op {op!r}")
+
+
 @dataclasses.dataclass
 class Table:
     columns: Dict[str, object]
@@ -100,15 +128,20 @@ class Table:
             return self.dictionaries[name][vals]
         return vals
 
-    def code_for(self, name: str, value):
-        """Dictionary code of a string literal for predicate pushdown."""
-        if name not in self.dictionaries:
-            return value
-        idx = np.searchsorted(self.dictionaries[name], value)
-        d = self.dictionaries[name]
-        if idx >= len(d) or d[idx] != value:
-            return -1  # literal not present: predicate selects nothing
-        return int(idx)
+    def code_for(self, name: str, value, op: str = "eq"):
+        """Dictionary code of a string literal for predicate pushdown.
+
+        Equality ops (``eq``/``ne``/``isin``) need the literal's EXACT code
+        (-1 when absent: the predicate selects nothing / everything).
+        Range ops map the literal to a *boundary* code via one searchsorted
+        into the (sorted) dictionary — codes are assigned in sorted value
+        order, so ``column <op> literal`` on strings is EXACTLY
+        ``codes <op> boundary`` on the stored codes, whether or not the
+        literal itself is present (non-exact literals shift the boundary
+        for the inclusive-flavored ops ``le``/``gt``). String-range
+        predicates therefore push down without decoding, like equality.
+        """
+        return dictionary_code_for(self.dictionaries, name, value, op)
 
     def sorted_order(self, name: str):
         """Permutation sorting column ``name``'s stored (code-space) values,

@@ -42,6 +42,7 @@ from repro.kernels.bucketize import (
 )
 from repro.kernels.rle_decode import rle_decode_kernel
 from repro.kernels.segment_reduce import segment_sum_kernel
+from repro.kernels.topk import MAX_KERNEL_K, topk_kernel
 
 # dtypes the 1-D kernels handle natively (4-byte words; narrower dtypes
 # keep the XLA path — their TPU tile shapes differ and the engine only
@@ -71,6 +72,15 @@ class DispatchPolicy:
     # ingest-recorded domain metadata and the product domain fits.
     enable_sort_free: bool = True
     sort_free_max_domain: int = 1 << 20
+    # top-k (order.py row-level path): below this many rows lax.top_k's
+    # fused sort wins; above the kernel's partial-bitonic tiles pay off.
+    topk_min_rows: int = 4096
+    topk_max_k: int = MAX_KERNEL_K
+    # entry-level ordering (order.py): sort/select RLE columns by RUNS and
+    # bounded-domain keys by histogram ranks instead of row-level sorts.
+    # Off -> every ORDER BY decodes to rows first (the paper's row-level
+    # baseline; benchmarks/bench_orderby.py measures the gap).
+    enable_entry_order: bool = True
 
     def pallas_enabled(self) -> bool:
         if self.use_pallas is not None:
@@ -104,6 +114,7 @@ def policy_from_env(env=None) -> DispatchPolicy:
     env = os.environ if env is None else env
     base = DispatchPolicy()
     sort_free = _env_tristate(env, "REPRO_SORT_FREE")
+    entry_order = _env_tristate(env, "REPRO_ENTRY_ORDER")
     return DispatchPolicy(
         use_pallas=_env_tristate(env, "REPRO_USE_PALLAS"),
         interpret=_env_tristate(env, "REPRO_PALLAS_INTERPRET"),
@@ -119,6 +130,9 @@ def policy_from_env(env=None) -> DispatchPolicy:
         enable_sort_free=True if sort_free is None else sort_free,
         sort_free_max_domain=_env_int(
             env, "REPRO_SORT_FREE_MAX_DOMAIN", base.sort_free_max_domain),
+        topk_min_rows=_env_int(env, "REPRO_TOPK_MIN_ROWS", base.topk_min_rows),
+        topk_max_k=_env_int(env, "REPRO_TOPK_MAX_K", base.topk_max_k),
+        enable_entry_order=True if entry_order is None else entry_order,
     )
 
 
@@ -204,3 +218,19 @@ def segment_sum(values: jax.Array, segment_ids: jax.Array,
                                   interpret=pol.interpret_mode())
     return jnp.zeros((num_segments,), values.dtype).at[segment_ids].add(
         values, mode="drop")
+
+
+def topk(values: jax.Array, k: int):
+    """Top-k (descending) of a 1-D rank-key tensor: ``(vals[k], idx[k])``.
+
+    Ties resolve to the lowest index on BOTH implementations (pandas-stable
+    descending order); ascending callers flip the rank key (order.py).
+    Routes to the partial-bitonic Pallas kernel when the policy allows and
+    (rows, k) clear the thresholds, else ``jax.lax.top_k``.
+    """
+    pol = policy()
+    if (pol.pallas_enabled() and values.shape[0] >= pol.topk_min_rows
+            and 1 <= k <= min(pol.topk_max_k, MAX_KERNEL_K)
+            and _kernel_ok(values)):
+        return topk_kernel(values, k, interpret=pol.interpret_mode())
+    return jax.lax.top_k(values, k)

@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: partial-bitonic top-k selection.
+
+The ordering subsystem's row-level hot path (DESIGN.md §10) is "find the k
+best rows of a value tensor" — the kernel form of ``jax.lax.top_k``. The
+classic GPU/TPU formulation is *partial* bitonic: instead of sorting all N
+elements (O(N log^2 N) network), each tile keeps only a K-wide candidate
+row and halves the candidate set with bitonic merges, so the network depth
+is O(log^2 K · log(TILE/K)) per tile and tiles stream through the grid.
+
+Per grid step (one TILE-element slab resident in VMEM):
+
+  1. reshape the slab to (TILE/K, K) and bitonic-sort every row descending
+     (K is the pow2-rounded k; the compare-exchange network is unrolled at
+     trace time — all partner permutations are static),
+  2. log2(TILE/K) merge rounds: pair rows (a, b), take the element-wise
+     better of ``a[i]`` vs ``b[K-1-i]`` (the first exchange of a 2K bitonic
+     merge — provably keeps the top-K of the union), then clean the
+     resulting bitonic row with a log2(K)-stage merge network,
+  3. emit the surviving (K,) values + source indices per tile.
+
+A final ``lax.top_k`` over the T·K survivors (T = #tiles, ≪ N) picks the
+global top-k. The comparator is lexicographic ``(value desc, index asc)``
+throughout, so ties resolve to the LOWEST source index — exactly
+``lax.top_k``'s contract and pandas' stable descending sort, which the
+parity tests assert element-for-element.
+
+Ascending order is the caller's job (flip the rank key — order.py), as is
+validity masking (invalid rows carry a worst-rank sentinel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 2048  # slab per grid step: TILE values + TILE indices resident
+MAX_KERNEL_K = 256  # K beyond this: candidate rows stop fitting sublanes
+
+
+def _worst(dtype):
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.iinfo(dtype).min
+    return -jnp.inf
+
+
+def _better(v, i, pv, pi):
+    """Lexicographic (value desc, index asc): is the partner better?"""
+    return (pv > v) | ((pv == v) & (pi < i))
+
+
+def _lane(shape):
+    """Per-lane index along the last axis (in-kernel iota: Pallas kernels
+    may not capture host-built index constants)."""
+    return jax.lax.broadcasted_iota(jnp.int32, shape, len(shape) - 1)
+
+
+def _cmpex(v, i, jj: int, kk: int):
+    """One compare-exchange stage at partner distance ``jj``. Lanes with
+    ``(lane & kk) == 0`` sort descending (``kk=0``: every lane descending —
+    the merge-network case)."""
+    lane = _lane(v.shape)
+    perm = lane ^ jj
+    pv = jnp.take_along_axis(v, perm, axis=-1)
+    pi = jnp.take_along_axis(i, perm, axis=-1)
+    is_low = (lane & jj) == 0
+    desc = (lane & kk) == 0
+    # an element wants the BETTER of the pair iff it is the low slot of a
+    # descending block or the high slot of an ascending one
+    p_better = _better(v, i, pv, pi)
+    take = jnp.where(is_low == desc, p_better, ~p_better)
+    return jnp.where(take, pv, v), jnp.where(take, pi, i)
+
+
+def _bitonic_sort_desc(v, i):
+    """Sort every row of the last axis descending (full bitonic network)."""
+    k = v.shape[-1]
+    kk = 2
+    while kk <= k:
+        jj = kk // 2
+        while jj >= 1:
+            v, i = _cmpex(v, i, jj, kk)
+            jj //= 2
+        kk *= 2
+    return v, i
+
+
+def _merge_rows_desc(v, i):
+    """Halve the candidate rows: each pair keeps the top-K of its union."""
+    k = v.shape[-1]
+    av, bv, ai, bi = v[0::2], v[1::2], i[0::2], i[1::2]
+    rbv, rbi = bv[:, ::-1], bi[:, ::-1]
+    pb = _better(av, ai, rbv, rbi)
+    mv = jnp.where(pb, rbv, av)
+    mi = jnp.where(pb, rbi, ai)
+    # mv is bitonic and holds the union's top-K; clean with a merge network
+    jj = k // 2
+    while jj >= 1:
+        mv, mi = _cmpex(mv, mi, jj, 0)
+        jj //= 2
+    return mv, mi
+
+
+def _topk_body(k_pow2: int, v_ref, ov_ref, oi_ref):
+    t = pl.program_id(0)
+    v = v_ref[...]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (TILE,), 0) + t * TILE
+    m = TILE // k_pow2
+    v2 = v.reshape(m, k_pow2)
+    i2 = idx.reshape(m, k_pow2)
+    v2, i2 = _bitonic_sort_desc(v2, i2)
+    while v2.shape[0] > 1:
+        v2, i2 = _merge_rows_desc(v2, i2)
+    ov_ref[...] = v2[0]
+    oi_ref[...] = i2[0]
+
+
+def topk_kernel(values: jax.Array, k: int, interpret: bool = False):
+    """Top-k (descending) of a 1-D int32/float32 array.
+
+    Returns ``(vals[k], idx[k])`` with lax.top_k tie semantics (equal
+    values -> lowest index first). Padding slots carry the dtype's worst
+    sentinel and past-the-end indices, so they lose every comparison a
+    real element can win.
+    """
+    n = values.shape[0]
+    if k < 1:
+        raise ValueError("topk_kernel: k must be >= 1")
+    k_pow2 = max(8, 1 << (k - 1).bit_length())
+    if k_pow2 > MAX_KERNEL_K:
+        raise ValueError(f"topk_kernel: k={k} beyond kernel limit")
+    pad = max(-(-n // TILE) * TILE, TILE)
+    if pad != n:
+        values = jnp.pad(values, (0, pad - n),
+                         constant_values=_worst(values.dtype))
+    n_tiles = pad // TILE
+    vals, idx = pl.pallas_call(
+        functools.partial(_topk_body, k_pow2),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((TILE,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((k_pow2,), lambda i: (i,)),
+                   pl.BlockSpec((k_pow2,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n_tiles * k_pow2,), values.dtype),
+                   jax.ShapeDtypeStruct((n_tiles * k_pow2,), jnp.int32)],
+        interpret=interpret,
+    )(values)
+    if n_tiles == 1:
+        return vals[:k], idx[:k]
+    # Survivor reduction: T·K candidates, already per-tile sorted. Tiles
+    # appear in index order and intra-tile ties kept the lowest indices, so
+    # a plain value top_k over the candidate list preserves exact stable
+    # tie order (first occurrence in the list == lowest source index).
+    fv, slot = jax.lax.top_k(vals, k)
+    return fv, idx[slot]

@@ -1,0 +1,410 @@
+"""Ordering subsystem conformance (DESIGN.md §10): ORDER BY / TOP-K /
+LIMIT against a pandas ``sort_values(kind="stable")`` oracle.
+
+Covers the three ranking paths (bounded-domain histogram ranks, entry
+sort, row-level ``dispatch.topk``), descending keys, tie stability, NaN
+placement, ``limit`` past the surviving row count, empty post-filter
+inputs, ordering on join-gathered columns and aggregate outputs, the
+single-table == partitioned equivalence across the six key encodings, and
+the ranked zone-map pruning transfer-count contract.
+"""
+import numpy as np
+import pytest
+
+pd = pytest.importorskip("pandas")
+
+from repro.core import compress
+from repro.core import partition as P
+from repro.core.partition import PartitionedQuery, PartitionedTable
+from repro.core.plan import Query, col
+from repro.core.table import Table
+from repro.kernels import dispatch
+
+CFG = compress.CompressionConfig(plain_threshold=1000)
+
+ENCODINGS = [None, "plain", "rle", "index", "rle_index", "plain_index"]
+
+
+def make_data(rng, n=20_000, n_keys=50):
+    return {
+        "k": np.sort(rng.integers(0, n_keys, n)).astype(np.int32),  # RLE-able
+        "v": rng.integers(0, 1000, n).astype(np.int32),
+        "f": rng.random(n).astype(np.float32),
+        "s": rng.choice([f"C{i:02d}" for i in range(20)], n),
+    }
+
+
+def oracle(df, by, ascending, k=None):
+    out = df.sort_values(by, ascending=ascending, kind="stable")
+    return out.head(k) if k is not None else out
+
+
+def check(res, want, cols=("k", "v")):
+    np.testing.assert_array_equal(res.positions, want.index.values)
+    for c in cols:
+        if np.asarray(want[c].values).dtype.kind == "f":
+            np.testing.assert_allclose(res.columns[c], want[c].values,
+                                       rtol=1e-6)
+        else:
+            np.testing.assert_array_equal(res.columns[c], want[c].values)
+
+
+@pytest.fixture
+def transfer_counter(monkeypatch):
+    calls = []
+    real = P.device_put
+
+    def counting(tree):
+        calls.append(tree)
+        return real(tree)
+
+    monkeypatch.setattr(P, "device_put", counting)
+    return calls
+
+
+# ---------------------------------------------------------------------------
+# single-table conformance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("desc", [False, True])
+@pytest.mark.parametrize("key", ["k", "v", "f", "s"])
+def test_top_k_single_key(rng, key, desc):
+    data = make_data(rng)
+    df = pd.DataFrame(data)
+    r = Query(Table.from_arrays(data, cfg=CFG)).order_by(
+        key, descending=desc, limit=13).run()
+    w = oracle(df, key, not desc, 13)
+    check(r, w, cols=("k", "v", "f", "s"))
+    assert r.n == 13
+
+
+def test_ties_are_stable_row_order(rng):
+    """Heavy ties: every path must keep ascending row order within equal
+    keys (pandas kind='stable')."""
+    n = 5_000
+    data = {"k": rng.integers(0, 4, n).astype(np.int32),
+            "v": np.arange(n, dtype=np.int32)}
+    df = pd.DataFrame(data)
+    t = Table.from_arrays(data, cfg=CFG)
+    for desc in (False, True):
+        r = Query(t).order_by("k", descending=desc, limit=50).run()
+        check(r, oracle(df, "k", not desc, 50))
+
+
+def test_multi_key_mixed_directions(rng):
+    data = make_data(rng)
+    df = pd.DataFrame(data)
+    t = Table.from_arrays(data, cfg=CFG)
+    r = (Query(t).filter(col("v") > 300)
+         .order_by(["s", "f"], descending=[True, False], limit=19).run())
+    w = oracle(df[df.v > 300], ["s", "f"], [False, True], 19)
+    check(r, w, cols=("s", "f", "v"))
+
+
+def test_nan_keys_rank_last_both_directions(rng):
+    n = 2_000
+    f = rng.random(n).astype(np.float32)
+    f[rng.choice(n, 300, replace=False)] = np.nan
+    data = {"f": f, "v": np.arange(n, dtype=np.int32)}
+    df = pd.DataFrame(data)
+    t = Table.from_arrays(data, cfg=CFG)
+    for desc in (False, True):
+        r = Query(t).order_by("f", descending=desc, limit=n).run()
+        w = oracle(df, "f", not desc)  # pandas: na_position='last'
+        np.testing.assert_array_equal(r.positions, w.index.values)
+
+
+def test_nan_ranks_after_real_infinities(rng):
+    """Regression: NaN keys must rank strictly after GENUINE +/-inf values
+    (a NaN->inf sentinel would tie them), on every path and on the
+    partitioned merge."""
+    f = np.array([np.nan, np.nan, -np.inf, -np.inf, np.inf, 5.0, 1.0,
+                  np.nan, -np.inf, np.inf, 2.0, 3.0] * 4, np.float32)
+    data = {"f": f, "v": np.arange(len(f), dtype=np.int32)}
+    df = pd.DataFrame(data)
+    t = Table.from_arrays(data, cfg=CFG)
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=4)
+    t_rle = Table.from_arrays(data, cfg=CFG, encodings={"f": "rle"})
+    for desc in (False, True):
+        want = oracle(df, "f", not desc)
+        for table in (t, t_rle):  # dense (Plain) and entry-sort (RLE) paths
+            for ov in ({}, {"enable_entry_order": False}):
+                with dispatch.overrides(**ov):
+                    r = Query(table).order_by("f", descending=desc,
+                                              limit=len(f)).run()
+                np.testing.assert_array_equal(r.positions,
+                                              want.index.values, (desc, ov))
+        rp = (PartitionedQuery(pt)
+              .order_by("f", descending=desc, limit=len(f)).run())
+        np.testing.assert_array_equal(rp.positions, want.index.values)
+
+
+def test_limit_beyond_survivors_and_no_limit(rng):
+    data = make_data(rng, n=3_000)
+    df = pd.DataFrame(data)
+    t = Table.from_arrays(data, cfg=CFG)
+    r = Query(t).filter(col("v") > 990).order_by("v", limit=500).run()
+    w = oracle(df[df.v > 990], "v", True)
+    assert r.n == len(w) < 500
+    check(r, w)
+    # no limit: full ORDER BY
+    r2 = Query(t).order_by(["k", "v"], limit=None).run()
+    w2 = oracle(df, ["k", "v"], True)
+    assert r2.n == len(df)
+    check(r2, w2)
+
+
+def test_empty_after_filter(rng):
+    data = make_data(rng, n=2_000)
+    t = Table.from_arrays(data, cfg=CFG)
+    r = Query(t).filter(col("v") > 10**6).order_by("v", limit=5).run()
+    assert r.n == 0
+    assert len(r.positions) == 0
+    assert len(r.columns["v"]) == 0
+
+
+def test_paths_agree(rng):
+    """Bounded-domain, entry-sort and row-level paths produce identical
+    ranked output on the same RLE dict-domain key."""
+    data = make_data(rng)
+    df = pd.DataFrame(data)
+    want = oracle(df, ["k", "v"], [False, True], 21)
+    t = Table.from_arrays(data, cfg=CFG)
+    results = {}
+    for name, ov in (("bounded", {}),
+                     ("entry", {"sort_free_max_domain": 0}),
+                     ("rowlevel", {"enable_entry_order": False})):
+        with dispatch.overrides(**ov):
+            q = Query(t).order_by(["k", "v"], descending=[True, False],
+                                  limit=21)
+            results[name] = q.run()
+    for name, r in results.items():
+        np.testing.assert_array_equal(r.positions, want.index.values, name)
+
+
+def test_order_by_cols_subset_and_validation(rng):
+    data = make_data(rng, n=2_000)
+    t = Table.from_arrays(data, cfg=CFG)
+    r = Query(t).order_by("v", descending=True, limit=5, cols=["s"]).run()
+    assert set(r.columns) == {"s", "v"}  # keys always ride along
+    with pytest.raises(ValueError):
+        Query(t).order_by("v", limit=0)
+    with pytest.raises(ValueError):
+        Query(t).order_by("v", descending=[True, False])
+    with pytest.raises(ValueError):
+        Query(t).aggregate({"c": ("count", None)}).order_by("c")
+    with pytest.raises(KeyError):
+        (Query(t).groupby(["k"], {"c": ("count", None)})
+         .order_by("nope"))
+    q = Query(t).order_by("v")
+    with pytest.raises(ValueError):
+        q.order_by("k")
+
+
+# ---------------------------------------------------------------------------
+# ordering composes with the rest of the pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_order_on_join_gathered_column(rng):
+    """Ranking on a dimension attribute gathered through a PK-FK join,
+    with the dimension's dictionary decoding the output."""
+    n = 8_000
+    fact = {"fk": rng.integers(0, 40, n).astype(np.int32),
+            "v": rng.integers(0, 100, n).astype(np.int32)}
+    dim = {"fk": np.arange(40, dtype=np.int32),
+           "name": np.array([f"N{i:02d}" for i in range(40)]),
+           "w": rng.integers(0, 1000, 40).astype(np.int32)}
+    t = Table.from_arrays(fact, cfg=CFG)
+    d = Table.from_arrays(dim, cfg=CFG)
+    r = (Query(t).join(d, fk="fk", cols=["name", "w"])
+         .order_by(["w", "v"], descending=[True, False], limit=11).run())
+    m = pd.DataFrame(fact).merge(pd.DataFrame(dim), on="fk")
+    m = m.set_index(pd.DataFrame(fact).index)  # merge keeps fact order here
+    w = oracle(m, ["w", "v"], [False, True], 11)
+    np.testing.assert_array_equal(r.positions, w.index.values)
+    np.testing.assert_array_equal(r.columns["name"], w.name.values)
+    np.testing.assert_array_equal(r.columns["w"], w.w.values)
+
+
+def test_order_groupby_result(rng):
+    data = make_data(rng)
+    df = pd.DataFrame(data)
+    t = Table.from_arrays(data, cfg=CFG)
+    r = (Query(t).groupby(["s"], {"rev": ("sum", "f"), "c": ("count", None)},
+                          num_groups_cap=64)
+         .order_by("rev", descending=True, limit=6).run())
+    wg = (df.groupby("s").agg(rev=("f", "sum"), c=("f", "size"))
+          .reset_index().sort_values("rev", ascending=False, kind="stable")
+          .head(6))
+    ng = int(r.num_groups)
+    assert ng == 6
+    np.testing.assert_allclose(np.asarray(r.aggs["rev"])[:ng], wg.rev.values,
+                               rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(r.aggs["c"])[:ng], wg.c.values)
+
+
+def test_string_range_pushdown_matches_pandas(rng):
+    """Satellite regression: range literals on dictionary columns push
+    down via searchsorted boundary codes — exact AND absent literals, all
+    four operators, plus between() — without decoding."""
+    data = make_data(rng, n=4_000)
+    df = pd.DataFrame(data)
+    t = Table.from_arrays(data, cfg=CFG)
+
+    def count(pred):
+        return int(Query(t).filter(pred).aggregate(
+            {"c": ("count", None)}).run()["c"])
+
+    assert count(col("s") < "C07") == int((df.s < "C07").sum())
+    assert count(col("s") <= "C07") == int((df.s <= "C07").sum())
+    assert count(col("s") > "C12") == int((df.s > "C12").sum())
+    assert count(col("s") >= "C12") == int((df.s >= "C12").sum())
+    # absent literals (between dictionary entries / past the ends)
+    assert count(col("s") < "C07x") == int((df.s < "C07x").sum())
+    assert count(col("s") >= "C07x") == int((df.s >= "C07x").sum())
+    assert count(col("s") <= "A") == 0
+    assert count(col("s") > "ZZZ") == 0
+    assert count(col("s").between("C05", "C11x")) == int(
+        df.s.between("C05", "C11x").sum())
+
+
+def test_string_range_zone_map_pruning(rng, transfer_counter):
+    """Range literals also prune partitions now (zone maps on codes)."""
+    n = 8_000
+    data = {"s": np.sort(rng.choice([f"C{i:02d}" for i in range(40)], n)),
+            "v": rng.integers(0, 100, n).astype(np.int32)}
+    df = pd.DataFrame(data)
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=8)
+    q = (PartitionedQuery(pt).filter(col("s") >= "C35")
+         .aggregate({"c": ("count", None)}))
+    assert int(q.run()["c"]) == int((df.s >= "C35").sum())
+    assert q.last_stats["skipped"] >= 5
+    assert len(transfer_counter) == q.last_stats["executed"]
+
+
+# ---------------------------------------------------------------------------
+# partitioned == single-table, across the six key encodings
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("enc", ENCODINGS)
+def test_partitioned_equivalence_all_encodings(rng, enc):
+    data = make_data(rng, n=12_000)
+    df = pd.DataFrame(data)
+    encodings = {"k": enc} if enc else None
+    t = Table.from_arrays(data, cfg=CFG, encodings=encodings)
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=5,
+                                      encodings=encodings)
+    want = oracle(df[df.v > 200], ["k", "f"], [False, True], 15)
+    for q in (Query(t), PartitionedQuery(pt)):
+        r = (q.filter(col("v") > 200)
+             .order_by(["k", "f"], descending=[True, False], limit=15).run())
+        np.testing.assert_array_equal(r.positions, want.index.values)
+        np.testing.assert_array_equal(r.columns["k"], want.k.values)
+        np.testing.assert_array_equal(r.columns["s"], want.s.values)
+
+
+def test_partitioned_groupby_order_matches_single(rng):
+    data = make_data(rng, n=12_000)
+    df = pd.DataFrame(data)
+    t = Table.from_arrays(data, cfg=CFG)
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=4)
+    wg = (df.groupby("k").agg(rev=("f", "sum")).reset_index()
+          .sort_values("rev", ascending=False, kind="stable").head(7))
+    rs = (Query(t).groupby(["k"], {"rev": ("sum", "f")}, num_groups_cap=64)
+          .order_by("rev", descending=True, limit=7).run())
+    rp = (PartitionedQuery(pt)
+          .groupby(["k"], {"rev": ("sum", "f")}, num_groups_cap=64)
+          .order_by("rev", descending=True, limit=7).run())
+    ngs = int(rs.num_groups)
+    assert ngs == rp.num_groups == 7
+    np.testing.assert_array_equal(np.asarray(rs.keys["k"])[:ngs],
+                                  wg.k.values)
+    np.testing.assert_array_equal(rp.keys["k"], wg.k.values)
+    np.testing.assert_allclose(rp.aggs["rev"], wg.rev.values, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ranked zone-map pruning: held-bound partitions are never transferred
+# ---------------------------------------------------------------------------
+
+
+def test_ranked_pruning_skips_transfers(rng, transfer_counter):
+    """The benchmark-shaped acceptance check: on a clustered order key,
+    holding k rows with bound B proves partitions whose key zone map
+    cannot beat B contribute nothing — they are never device_put."""
+    n = 40_000
+    data = {"k": np.sort(rng.integers(0, 500, n)).astype(np.int32),
+            "v": rng.integers(0, 1000, n).astype(np.int32)}
+    df = pd.DataFrame(data)
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=8)
+    want = oracle(df, "k", False, 10)
+
+    q = PartitionedQuery(pt).order_by("k", descending=True, limit=10)
+    r = q.run()
+    np.testing.assert_array_equal(r.positions, want.index.values)
+    pruned_transfers = len(transfer_counter)
+    assert q.last_stats["ranked_skipped"] >= 5
+    assert pruned_transfers == q.last_stats["executed"] <= 3
+
+    # same query, pruning disabled: every partition transfers — the
+    # asserted transfer-count reduction
+    q2 = PartitionedQuery(pt).order_by("k", descending=True, limit=10)
+    q2.ranked_pruning = False
+    r2 = q2.run()
+    np.testing.assert_array_equal(r2.positions, r.positions)
+    assert len(transfer_counter) - pruned_transfers == 8 > pruned_transfers
+
+    # ascending ranks prune from the other end
+    q3 = PartitionedQuery(pt).order_by("k", limit=10)
+    r3 = q3.run()
+    np.testing.assert_array_equal(r3.positions,
+                                  oracle(df, "k", True, 10).index.values)
+    assert q3.last_stats["ranked_skipped"] >= 5
+
+
+def test_ranked_pruning_ties_at_bound_still_execute(rng):
+    """A partition whose zone map EQUALS the k-th bound may still win the
+    row-id tiebreak — it must execute, not skip."""
+    k = np.concatenate([np.full(100, 5, np.int32),
+                        np.full(100, 3, np.int32),
+                        np.full(100, 5, np.int32)])
+    data = {"k": k, "v": np.arange(300, dtype=np.int32)}
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, boundaries=[100, 200])
+    q = PartitionedQuery(pt).order_by("k", descending=True, limit=150)
+    r = q.run()
+    want = oracle(pd.DataFrame(data), "k", False, 150)
+    np.testing.assert_array_equal(r.positions, want.index.values)
+
+
+# ---------------------------------------------------------------------------
+# Pallas top-k kernel: dispatch routing + parity
+# ---------------------------------------------------------------------------
+
+
+def test_topk_kernel_routes_and_matches(rng):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import topk as topk_mod
+
+    x = jnp.asarray(rng.integers(0, 97, 20_000).astype(np.int32))
+    want_v, want_i = jax.lax.top_k(x, 37)
+    with dispatch.overrides(use_pallas=True, interpret=True,
+                            topk_min_rows=1):
+        got_v, got_i = dispatch.topk(x, 37)
+    np.testing.assert_array_equal(got_v, want_v)
+    np.testing.assert_array_equal(got_i, want_i)
+    # floats with ties and exact stability
+    xf = jnp.asarray(rng.choice([0.5, 1.5, -2.0, 3.25], 10_000)
+                     .astype(np.float32))
+    want_v, want_i = jax.lax.top_k(xf, 64)
+    got_v, got_i = topk_mod.topk_kernel(xf, 64, interpret=True)
+    np.testing.assert_array_equal(got_v, want_v)
+    np.testing.assert_array_equal(got_i, want_i)
+    # k beyond the kernel's limit routes to lax.top_k (no error)
+    with dispatch.overrides(use_pallas=True, interpret=True,
+                            topk_min_rows=1, topk_max_k=8):
+        v, i = dispatch.topk(x, 16)
+    np.testing.assert_array_equal(v, jax.lax.top_k(x, 16)[0])

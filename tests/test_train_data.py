@@ -60,13 +60,11 @@ def test_checkpoint_roundtrip_and_gc(trained):
                zip(jax.tree.leaves(state), jax.tree.leaves(restored)))
 
 
-@pytest.mark.xfail(strict=False, reason=(
-    "pre-existing since the seed (tracked in ISSUE 3 satellite 1): relies\n"
-    "on jax.sharding APIs (AxisType-era mesh) newer than the pinned\n"
-    "jax 0.4.x — not a query-engine regression"))
 def test_checkpoint_elastic_reshard(trained):
     """Elastic restore: save unsharded, restore onto an explicit 1-device
-    mesh sharding (the k-device case is covered by the subprocess test)."""
+    mesh sharding (the k-device case is covered by the subprocess test).
+    ``make_host_mesh`` goes through the mesh compat shim, so this runs on
+    the pinned jax 0.4.x line too (it xfailed since the seed)."""
     cfg, tcfg, state, *_ = trained
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.launch.mesh import make_host_mesh
