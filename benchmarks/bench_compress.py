@@ -1,0 +1,116 @@
+"""Bit-packed transfer benchmark (DESIGN.md §11): packed vs unpacked H2D
+bytes + end-to-end out-of-core query time on a dict-heavy workload.
+
+The paper's out-of-core bottleneck is the host->device transfer of the
+compressed partitions; whole-dtype narrowing still ships a 9-bit
+dictionary code as 16/32 bits. This harness ingests the same dict-heavy
+star slice twice — ``pack=False`` / ``pack=True`` — streams an identical
+filter+group-by over every partition (the zone-unfriendly predicate
+defeats skipping, so EVERY partition's bytes are measured), and reports:
+
+  * total H2D bytes per query, counted at the ``device_put`` boundary,
+  * ``transfer_reduction`` = unpacked / packed bytes (the CI-gated
+    metric; >= 1.5x on this schema, roughly bit_width/32 per column),
+  * end-to-end query wall time for both layouts,
+  * packed vs unpacked footprint side by side (Table.nbytes /
+    nbytes_unpacked).
+
+Emits ``artifacts/bench/BENCH_compress.json``; the committed quick-scale
+baseline ``BENCH_compress_quick.json`` feeds ``check_regression`` in the
+CI bench-smoke job.
+
+    PYTHONPATH=src python -m benchmarks.bench_compress
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import jax
+
+from repro.core import compress
+from repro.core.partition import PartitionedQuery, PartitionedTable
+from repro.core.plan import col
+from benchmarks.common import ART_DIR, count_h2d, time_fn
+
+DICT_CARD = 500  # 9-bit dictionary code space per string column
+
+
+def make_dict_heavy(rng, n: int):
+    """Dict-heavy BI shape: three 500-value string dimensions (codes ship
+    as int32 without packing, 9 bits with) + two narrow measures."""
+    vocab = np.array([f"v{i:04d}" for i in range(DICT_CARD)])
+    return {
+        "a": vocab[rng.integers(0, DICT_CARD, n)],
+        "b": vocab[rng.integers(0, DICT_CARD, n)],
+        "c": vocab[rng.integers(0, DICT_CARD, n)],
+        "units": rng.integers(0, 100, n).astype(np.int32),
+        "qty": rng.integers(0, 1000, n).astype(np.int32),
+    }
+
+
+def _query(pt):
+    return (PartitionedQuery(pt)
+            .filter(col("units") < 90)  # selective but zone-unprunable
+            .groupby(["a"], {"s": ("sum", "qty"), "c": ("count", None)},
+                     num_groups_cap=1024))
+
+
+def run(n=2_000_000, num_partitions=16, out_name="BENCH_compress.json"):
+    rng = np.random.default_rng(7)
+    data = make_dict_heavy(rng, n)
+    cfg = compress.CompressionConfig(plain_threshold=1000)
+
+    results = {}
+    for label, pack in (("unpacked", False), ("packed", True)):
+        pt = PartitionedTable.from_arrays(
+            data, cfg=cfg, num_partitions=num_partitions, pack=pack)
+        q = _query(pt)
+        transferred = []
+        with count_h2d(transferred):  # counted run only — timing below
+            r = q.run()               # must not pay the instrumentation
+        h2d = sum(transferred)
+        ms = time_fn(lambda: _query(pt).run(), warmup=1, iters=3) * 1e3
+        results[label] = {
+            "h2d_bytes": h2d,
+            "query_ms": round(ms, 3),
+            "footprint_bytes": pt.nbytes(),
+            "footprint_unpacked_bytes": pt.nbytes_unpacked(),
+            "num_groups": int(r.num_groups),
+        }
+        print(f"  {label:>9s} | H2D {h2d/2**20:8.2f} MiB | "
+              f"query {ms:8.2f} ms | footprint "
+              f"{pt.nbytes()/2**20:7.2f} MiB")
+
+    assert results["packed"]["num_groups"] == results["unpacked"]["num_groups"]
+    reduction = (results["unpacked"]["h2d_bytes"]
+                 / max(results["packed"]["h2d_bytes"], 1))
+    report = {
+        "bench": "compress_bitpack",
+        "backend": jax.default_backend(),
+        "rows": n,
+        "num_partitions": num_partitions,
+        "dict_cardinality": DICT_CARD,
+        "unpacked": results["unpacked"],
+        "packed": results["packed"],
+        "transfer_reduction": round(reduction, 3),
+        "footprint_reduction": round(
+            results["unpacked"]["footprint_bytes"]
+            / max(results["packed"]["footprint_bytes"], 1), 3),
+        "query_speedup_packed": round(
+            results["unpacked"]["query_ms"]
+            / max(results["packed"]["query_ms"], 1e-9), 3),
+    }
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, out_name)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"[bench_compress] H2D transfer reduction "
+          f"{report['transfer_reduction']:.2f}x, footprint "
+          f"{report['footprint_reduction']:.2f}x -> {path}")
+    return report
+
+
+if __name__ == "__main__":
+    run()

@@ -23,13 +23,19 @@ def run(n=2_000_000, fracs=(0.05, 0.2, 0.5, 1.0)):
     for f in fracs:
         m = int(n * f)
         sub = {k: v[:m] for k, v in data.items()}
-        t_comp = Table.from_arrays(
-            sub, cfg=compress.CompressionConfig(plain_threshold=1000))
+        cfg = compress.CompressionConfig(plain_threshold=1000)
+        t_comp = Table.from_arrays(sub, cfg=cfg)
+        # packed vs unpacked side by side (DESIGN.md §11): the same
+        # encodings with integer buffers bit-packed at domain width
+        t_pack = Table.from_arrays(sub, cfg=cfg, pack=True)
         plain_bytes = sum(v.dtype.itemsize * m for v in sub.values())
         rows.append({"fraction": f, "rows": m,
                      "plain_MiB": plain_bytes / 2**20,
                      "compressed_MiB": t_comp.nbytes() / 2**20,
-                     "ratio": plain_bytes / max(t_comp.nbytes(), 1)})
+                     "packed_MiB": t_pack.nbytes() / 2**20,
+                     "packed_unpacked_MiB": t_pack.nbytes_unpacked() / 2**20,
+                     "ratio": plain_bytes / max(t_comp.nbytes(), 1),
+                     "ratio_packed": plain_bytes / max(t_pack.nbytes(), 1)})
     # linear projection: budget = Plain footprint at 50% (paper's OOM point)
     budget = rows[-1]["plain_MiB"] * 0.5
     proj = {"budget_MiB": budget, "max_fraction_plain": 0.5,

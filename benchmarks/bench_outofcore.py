@@ -20,7 +20,7 @@ from repro.core import compress
 from repro.core.partition import PartitionedQuery, PartitionedTable, rows_for_budget
 from repro.core.table import Table
 from benchmarks.bench_tpch import SORT_ORDERS, make_lineitem, q1, q6
-from benchmarks.common import time_fn, write_csv
+from benchmarks.common import count_h2d, time_fn, write_csv
 
 BUDGET_MIB = 8.0  # per-partition uncompressed resident budget
 
@@ -37,16 +37,26 @@ def run(n=2_000_000):
         assert uncompressed > budget, (
             "bench misconfigured: working set must exceed the budget")
 
-        # budget-derived sizing, then coarser explicit sweeps
+        # budget-derived sizing, then coarser explicit sweeps; the budget
+        # point also runs with bit packing on (DESIGN.md §11) at the SAME
+        # partitioning — identical zone maps and skip set, so the h2d
+        # delta isolates the layout change (rows_for_budget(pack=True)'s
+        # "more rows per budget" effect is a separate, tested property —
+        # conflating the two here would also coarsen the zone maps and
+        # could move MORE bytes on skip-friendly queries)
         budget_rows = rows_for_budget(data, budget)
-        sweep = [("budget", None, budget_rows)] + [
-            (str(k), k, None) for k in (4, 8, 16, 32)]
-        for label, num_parts, part_rows in sweep:
+        sweep = [("budget", None, budget_rows, False),
+                 ("budget-packed", None, budget_rows, True)] + [
+            (str(k), k, None, False) for k in (4, 8, 16, 32)]
+        for label, num_parts, part_rows, pack in sweep:
             pt = PartitionedTable.from_arrays(
                 data, cfg=cfg, num_partitions=num_parts,
-                partition_rows=part_rows)
+                partition_rows=part_rows, pack=pack)
             q = qfn(pt)
-            ms = time_fn(lambda: q.run(), warmup=1, iters=3) * 1e3
+            h2d = []
+            with count_h2d(h2d):
+                q.run()
+            ms = time_fn(lambda: q.run(), warmup=0, iters=3) * 1e3
             per_part_unc = uncompressed / max(
                 sum(1 for p in pt.partitions if p.rows), 1)
             rows.append({
@@ -55,6 +65,7 @@ def run(n=2_000_000):
                 "skipped": q.last_stats["skipped"],
                 "traces": q.trace_count,
                 "ms": ms,
+                "h2d_MiB": sum(h2d) / 2**20,
                 "uncompressed_MiB": uncompressed / 2**20,
                 "budget_MiB": BUDGET_MIB,
                 "peak_part_MiB": pt.max_partition_nbytes() / 2**20,

@@ -1,4 +1,5 @@
-"""Shared benchmark utilities: timing, CSV output, data generators.
+"""Shared benchmark utilities: timing, CSV output, transfer counting,
+data generators.
 
 All benches run on the CPU backend at reduced row counts (DESIGN.md §9
 deviation 5): absolute times are not comparable to the paper's A100 numbers,
@@ -7,6 +8,7 @@ claims — are preserved, and every harness mirrors one paper table/figure.
 """
 from __future__ import annotations
 
+import contextlib
 import csv
 import os
 import time
@@ -31,6 +33,28 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
+
+
+@contextlib.contextmanager
+def count_h2d(into: List[int]):
+    """Count bytes crossing the partition executor's ``device_put``
+    boundary (DESIGN.md §11) — the ONE shared implementation used by
+    bench_compress, bench_outofcore and tests/test_packed.py, so the
+    CI-gated transfer metric and the test assertions cannot diverge."""
+    from repro.core import partition as partition_mod
+
+    real = partition_mod.device_put
+
+    def counting(tree):
+        into.append(sum(int(np.asarray(leaf).nbytes)
+                        for leaf in jax.tree_util.tree_leaves(tree)))
+        return real(tree)
+
+    partition_mod.device_put = counting
+    try:
+        yield into
+    finally:
+        partition_mod.device_put = real
 
 
 def write_csv(name: str, rows: List[Dict], print_table: bool = True):

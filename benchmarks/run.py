@@ -18,7 +18,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
     q = args.quick
 
-    from benchmarks import (bench_and_design, bench_bi,
+    from benchmarks import (bench_and_design, bench_bi, bench_compress,
                             bench_compression_quality, bench_groupby,
                             bench_memory, bench_orderby, bench_outofcore,
                             bench_primitives, bench_production,
@@ -27,6 +27,7 @@ def main(argv=None):
     benches = {
         "groupby": lambda: bench_groupby.run(n=300_000 if q else 10_000_000),
         "orderby": lambda: bench_orderby.run(n=300_000 if q else 10_000_000),
+        "compress": lambda: bench_compress.run(n=300_000 if q else 2_000_000),
         "primitives": lambda: bench_primitives.run(
             sizes=(10_000, 100_000, 500_000) if q else
             (10_000, 100_000, 1_000_000, 4_000_000)),

@@ -19,6 +19,7 @@ from repro.core.encodings import (
     POS_DTYPE,
     IndexColumn,
     IndexMask,
+    PackedColumn,
     PlainColumn,
     PlainIndexColumn,
     PlainMask,
@@ -30,6 +31,7 @@ from repro.core.encodings import (
     decode_column,
     decode_mask,
     offset_is_zero,
+    unpack_values,
     valid_slots,
 )
 
@@ -57,10 +59,12 @@ def scalar_op(col, op, scalar):
     if isinstance(col, PlainColumn):
         return PlainColumn(values=f(col.decode(), scalar), nrows=col.nrows)
     if isinstance(col, RLEColumn):
-        return RLEColumn(values=f(col.values, scalar), starts=col.starts,
+        return RLEColumn(values=f(unpack_values(col.values), scalar),
+                         starts=col.starts,
                          ends=col.ends, n=col.n, nrows=col.nrows)
     if isinstance(col, IndexColumn):
-        return IndexColumn(values=f(col.values, scalar), positions=col.positions,
+        return IndexColumn(values=f(unpack_values(col.values), scalar),
+                           positions=col.positions,
                            n=col.n, nrows=col.nrows)
     if isinstance(col, PlainIndexColumn):
         return PlainColumn(values=f(decode_column(col), scalar), nrows=col.nrows)
@@ -86,24 +90,35 @@ def compare(col, op, literal):
     if isinstance(col, PlainColumn):
         return PlainMask(values=f(col.decode(), literal), nrows=col.nrows)
     if isinstance(col, RLEColumn):
-        keep = f(col.values, literal) & valid_slots(col.n, col.capacity)
-        (s, e), n = prim.compact(keep, (col.starts, col.ends), col.capacity,
-                                 (col.nrows, col.nrows))
+        # packed run values unpack in-register here: the predicate fuses
+        # with the shift+mask extraction (DESIGN.md §11)
+        keep = (f(unpack_values(col.values), literal)
+                & valid_slots(col.n, col.capacity))
+        (s, e), n = prim.compact(
+            keep, (unpack_values(col.starts), unpack_values(col.ends)),
+            col.capacity, (col.nrows, col.nrows))
         return RLEMask(starts=s, ends=e, n=n, nrows=col.nrows)
     if isinstance(col, IndexColumn):
-        keep = f(col.values, literal) & valid_slots(col.n, col.capacity)
-        (p,), n = prim.compact(keep, (col.positions,), col.capacity, (col.nrows,))
+        keep = (f(unpack_values(col.values), literal)
+                & valid_slots(col.n, col.capacity))
+        (p,), n = prim.compact(keep, (unpack_values(col.positions),),
+                               col.capacity, (col.nrows,))
         return IndexMask(positions=p, n=n, nrows=col.nrows)
     if isinstance(col, PlainIndexColumn):
         # Evaluate on the centered narrow base (literal shifted by -offset:
         # the bit-width-reduction trick keeps predicates narrow too), then
         # patch outlier positions.
-        base_mask = f(col.base.values.astype(jnp.int64) + col.base.offset, literal) \
-            if jnp.issubdtype(col.base.values.dtype, jnp.integer) \
-            and not offset_is_zero(col.base.offset) \
-            else f(col.base.values, literal)
-        out_mask = f(col.outliers.values, literal)
-        vals = base_mask.at[col.outliers.positions].set(out_mask, mode="drop")
+        if isinstance(col.base.values, PackedColumn):
+            base_mask = f(col.base.decode(), literal)
+        elif (jnp.issubdtype(col.base.values.dtype, jnp.integer)
+                and not offset_is_zero(col.base.offset)):
+            base_mask = f(col.base.values.astype(jnp.int64) + col.base.offset,
+                          literal)
+        else:
+            base_mask = f(col.base.values, literal)
+        out_mask = f(unpack_values(col.outliers.values), literal)
+        vals = base_mask.at[unpack_values(col.outliers.positions)].set(
+            out_mask, mode="drop")
         return PlainMask(values=vals, nrows=col.nrows)
     if isinstance(col, RLEIndexColumn):
         mr = compare(col.rle, op, literal)
@@ -118,13 +133,17 @@ def compare_range(col, lo, hi, lo_incl=True, hi_incl=True):
     f_lo = operator.ge if lo_incl else operator.gt
     f_hi = operator.le if hi_incl else operator.lt
     if isinstance(col, RLEColumn):
-        keep = f_lo(col.values, lo) & f_hi(col.values, hi) & valid_slots(col.n, col.capacity)
-        (s, e), n = prim.compact(keep, (col.starts, col.ends), col.capacity,
-                                 (col.nrows, col.nrows))
+        v = unpack_values(col.values)
+        keep = f_lo(v, lo) & f_hi(v, hi) & valid_slots(col.n, col.capacity)
+        (s, e), n = prim.compact(
+            keep, (unpack_values(col.starts), unpack_values(col.ends)),
+            col.capacity, (col.nrows, col.nrows))
         return RLEMask(starts=s, ends=e, n=n, nrows=col.nrows)
     if isinstance(col, IndexColumn):
-        keep = f_lo(col.values, lo) & f_hi(col.values, hi) & valid_slots(col.n, col.capacity)
-        (p,), n = prim.compact(keep, (col.positions,), col.capacity, (col.nrows,))
+        v = unpack_values(col.values)
+        keep = f_lo(v, lo) & f_hi(v, hi) & valid_slots(col.n, col.capacity)
+        (p,), n = prim.compact(keep, (unpack_values(col.positions),),
+                               col.capacity, (col.nrows,))
         return IndexMask(positions=p, n=n, nrows=col.nrows)
     from repro.core.logical import and_masks
     return and_masks(compare(col, f_lo, lo), compare(col, f_hi, hi))
@@ -160,8 +179,10 @@ def binary_op(c1, c2, op):
     if isinstance(c1, RLEColumn) and isinstance(c2, RLEColumn):
         cap_out = c1.capacity + c2.capacity
         s, e, i1, i2, n = prim.range_intersect(
-            c1.starts, c1.ends, c1.n, c2.starts, c2.ends, c2.n, c1.nrows, cap_out)
-        vals = f(c1.values[i1], c2.values[i2])
+            unpack_values(c1.starts), unpack_values(c1.ends), c1.n,
+            unpack_values(c2.starts), unpack_values(c2.ends), c2.n,
+            c1.nrows, cap_out)
+        vals = f(unpack_values(c1.values)[i1], unpack_values(c2.values)[i2])
         vals = jnp.where(valid_slots(n, cap_out), vals, 0)
         return RLEColumn(values=vals, starts=s, ends=e, n=n, nrows=c1.nrows)
 
@@ -173,8 +194,9 @@ def binary_op(c1, c2, op):
     if isinstance(c1, IndexColumn) and isinstance(c2, IndexColumn):
         cap_out = min(c1.capacity, c2.capacity)
         pos, s1, s2, n = prim.idx_in_idx(
-            c1.positions, c1.n, c2.positions, c2.n, c1.nrows, cap_out)
-        vals = f(c1.values[s1], c2.values[s2])
+            unpack_values(c1.positions), c1.n, unpack_values(c2.positions),
+            c2.n, c1.nrows, cap_out)
+        vals = f(unpack_values(c1.values)[s1], unpack_values(c2.values)[s2])
         vals = jnp.where(valid_slots(n, cap_out), vals, 0)
         return IndexColumn(values=vals, positions=pos, n=n, nrows=c1.nrows)
 
@@ -186,24 +208,28 @@ def binary_op(c1, c2, op):
         vals = f(decode_column(c1), c2.decode())
         return PlainColumn(values=vals, nrows=c1.nrows)
     if isinstance(c1, PlainColumn) and isinstance(c2, IndexColumn):
-        vals = f(c1.decode()[c2.positions], c2.values)
+        pos2 = unpack_values(c2.positions)
+        vals = f(c1.decode()[pos2], unpack_values(c2.values))
         vals = jnp.where(valid_slots(c2.n, c2.capacity), vals, 0)
-        return IndexColumn(values=vals, positions=c2.positions, n=c2.n, nrows=c1.nrows)
+        return IndexColumn(values=vals, positions=pos2, n=c2.n, nrows=c1.nrows)
     if isinstance(c1, IndexColumn) and isinstance(c2, PlainColumn):
-        vals = f(c1.values, c2.decode()[c1.positions])
+        pos1 = unpack_values(c1.positions)
+        vals = f(unpack_values(c1.values), c2.decode()[pos1])
         vals = jnp.where(valid_slots(c1.n, c1.capacity), vals, 0)
-        return IndexColumn(values=vals, positions=c1.positions, n=c1.n, nrows=c1.nrows)
+        return IndexColumn(values=vals, positions=pos1, n=c1.n, nrows=c1.nrows)
 
     raise TypeError(f"binary_op not defined for {type(c1)}, {type(c2)}")
 
 
 def _rle_op_index(cr: RLEColumn, ci: IndexColumn, f, swap: bool) -> IndexColumn:
     """RLE <op> Index: common positions are the index points inside runs."""
+    ci_pos = unpack_values(ci.positions)
     mask, run_id = prim.idx_in_rle_mask(
-        ci.positions, ci.n, cr.starts, cr.ends, cr.n)
-    rv = cr.values[run_id]
-    vals = f(ci.values, rv) if swap else f(rv, ci.values)
-    (pos, v), n = prim.compact(mask, (ci.positions, vals), ci.capacity, (ci.nrows, 0))
+        ci_pos, ci.n, unpack_values(cr.starts), unpack_values(cr.ends), cr.n)
+    rv = unpack_values(cr.values)[run_id]
+    iv = unpack_values(ci.values)
+    vals = f(iv, rv) if swap else f(rv, iv)
+    (pos, v), n = prim.compact(mask, (ci_pos, vals), ci.capacity, (ci.nrows, 0))
     return IndexColumn(values=v, positions=pos, n=n, nrows=cr.nrows)
 
 
@@ -242,14 +268,17 @@ def apply_mask(col, mask):
         if isinstance(mask, RLEMask):
             cap_out = col.capacity + mask.capacity
             s, e, i1, _, n = prim.range_intersect(
-                col.starts, col.ends, col.n, mask.starts, mask.ends, mask.n,
+                unpack_values(col.starts), unpack_values(col.ends), col.n,
+                mask.starts, mask.ends, mask.n,
                 col.nrows, cap_out)
-            vals = jnp.where(valid_slots(n, cap_out), col.values[i1], 0)
+            vals = jnp.where(valid_slots(n, cap_out),
+                             unpack_values(col.values)[i1], 0)
             return RLEColumn(values=vals, starts=s, ends=e, n=n, nrows=col.nrows)
         if isinstance(mask, IndexMask):
             m, run_id = prim.idx_in_rle_mask(
-                mask.positions, mask.n, col.starts, col.ends, col.n)
-            vals = col.values[run_id]
+                mask.positions, mask.n, unpack_values(col.starts),
+                unpack_values(col.ends), col.n)
+            vals = unpack_values(col.values)[run_id]
             (pos, v), n = prim.compact(m, (mask.positions, vals), mask.capacity,
                                        (mask.nrows, 0))
             return IndexColumn(values=v, positions=pos, n=n, nrows=col.nrows)
@@ -259,21 +288,23 @@ def apply_mask(col, mask):
                                nrows=col.nrows)
 
     if isinstance(col, IndexColumn):
+        cpos = unpack_values(col.positions)
+        cvals = unpack_values(col.values)
         if isinstance(mask, RLEMask):
             m, _ = prim.idx_in_rle_mask(
-                col.positions, col.n, mask.starts, mask.ends, mask.n)
-            (pos, v), n = prim.compact(m, (col.positions, col.values),
+                cpos, col.n, mask.starts, mask.ends, mask.n)
+            (pos, v), n = prim.compact(m, (cpos, cvals),
                                        col.capacity, (col.nrows, 0))
             return IndexColumn(values=v, positions=pos, n=n, nrows=col.nrows)
         if isinstance(mask, IndexMask):
             pos, s1, _, n = prim.idx_in_idx(
-                col.positions, col.n, mask.positions, mask.n, col.nrows, col.capacity)
-            vals = jnp.where(valid_slots(n, col.capacity), col.values[s1], 0)
+                cpos, col.n, mask.positions, mask.n, col.nrows, col.capacity)
+            vals = jnp.where(valid_slots(n, col.capacity), cvals[s1], 0)
             return IndexColumn(values=vals, positions=pos, n=n, nrows=col.nrows)
         if isinstance(mask, PlainMask):
-            sel = mask.values.at[col.positions].get(mode="fill", fill_value=False)
+            sel = mask.values.at[cpos].get(mode="fill", fill_value=False)
             keep = sel & valid_slots(col.n, col.capacity)
-            (pos, v), n = prim.compact(keep, (col.positions, col.values),
+            (pos, v), n = prim.compact(keep, (cpos, cvals),
                                        col.capacity, (col.nrows, 0))
             return IndexColumn(values=v, positions=pos, n=n, nrows=col.nrows)
 

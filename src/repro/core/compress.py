@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.core.encodings import (
     IndexColumn,
+    PackedColumn,
     PlainColumn,
     PlainIndexColumn,
     RLEColumn,
@@ -43,6 +44,10 @@ class CompressionConfig:
     # compiling one program per partition.
     capacity_bucket: Optional[str] = None  # None | "pow2"
     min_bucket: int = 8  # floor for bucketed capacities
+    # Sub-byte bit packing (DESIGN.md §11): pack integer buffers at the
+    # exact bit width of their (lo, hi) domain into uint32 lanes. Gated by
+    # the dispatch policy (enable_pack / pack_max_bits / REPRO_PACK*).
+    pack: bool = False
 
 
 def next_pow2(k: int, minimum: int = 1) -> int:
@@ -121,8 +126,13 @@ class ColumnStats:
     n_long_runs: int
     long_run_rows: int
     dtype: np.dtype
-    vmin: float
-    vmax: float
+    # EXACT Python ints for integer/bool columns, floats otherwise. A
+    # float64 vmin/vmax silently rounds integers past 2**53, so the
+    # centering value and the narrowing decision could both be wrong near
+    # the int domain edges (a center off by one overflows the narrow dtype
+    # and wraps the stored values) — min/max stay in the integer domain.
+    vmin: object
+    vmax: object
 
 
 def analyze(values: np.ndarray, min_run: int = 4) -> ColumnStats:
@@ -137,17 +147,30 @@ def analyze(values: np.ndarray, min_run: int = 4) -> ColumnStats:
     ends = np.concatenate([starts[1:] - 1, [n - 1]])
     lengths = ends - starts + 1
     long_mask = lengths >= min_run
+    exact = values.dtype.kind in "iub"
+    cast = int if exact else float
     return ColumnStats(
         nrows=n, n_runs=len(starts), rle_ratio=n / max(len(starts), 1),
         n_long_runs=int(long_mask.sum()), long_run_rows=int(lengths[long_mask].sum()),
-        dtype=values.dtype, vmin=float(values.min()), vmax=float(values.max()),
+        dtype=values.dtype, vmin=cast(values.min()), vmax=cast(values.max()),
     )
 
 
-def _narrow_int_dtype(lo: float, hi: float):
-    """Smallest signed int dtype covering [lo, hi] after mid-range centering."""
+def _center_span(lo, hi):
+    """Mid-range center + worst-case deviation, EXACT for integer bounds
+    (Python ints never round; float arithmetic on bounds past 2**53 can
+    shift the center by hundreds and wrap the centered values)."""
+    if isinstance(lo, (int, np.integer)) and isinstance(hi, (int, np.integer)):
+        lo, hi = int(lo), int(hi)
+        center = (lo + hi) // 2
+        return center, max(abs(lo - center), abs(hi - center))
     center = (lo + hi) / 2
-    span = max(abs(lo - center), abs(hi - center))
+    return center, max(abs(lo - center), abs(hi - center))
+
+
+def _narrow_int_dtype(lo, hi):
+    """Smallest signed int dtype covering [lo, hi] after mid-range centering."""
+    _, span = _center_span(lo, hi)
     for dt in (np.int8, np.int16, np.int32):
         if span <= np.iinfo(dt).max:
             return np.dtype(dt)
@@ -179,14 +202,29 @@ def choose_encoding(stats: ColumnStats, cfg: CompressionConfig) -> str:
 
 
 def encode(values: np.ndarray, cfg: CompressionConfig = CompressionConfig(),
-           encoding: Optional[str] = None):
+           encoding: Optional[str] = None,
+           pack_domain: Optional[Tuple[int, int]] = None):
     """Encode a host array into an encoded column (jnp buffers).
 
     Value-domain note (DESIGN.md §3/§9): the device value domain is
     int32 / float32. Integers outside int32 must be dictionary-encoded first
     (``Table.from_arrays`` does this automatically); float64 is narrowed to
     float32 exactly as TQP narrows decimals to floats (paper §2.1).
+
+    With ``cfg.pack`` the integer buffers of the result are bit-packed
+    (DESIGN.md §11). ``pack_domain`` is the column's ``(lo, size)`` value
+    domain (the ``column_domain`` convention) — partitioned ingest passes
+    the GLOBAL domain so every partition packs at the same bit width and
+    the shared jitted program never retraces on a per-partition range.
     """
+    col = _encode_unpacked(values, cfg, encoding)
+    if cfg.pack:
+        col = pack_encoded(col, pack_domain=pack_domain)
+    return col
+
+
+def _encode_unpacked(values: np.ndarray, cfg: CompressionConfig,
+                     encoding: Optional[str] = None):
     values = np.asarray(values)
     if values.dtype.kind == "i" and (
             values.size and (values.min() < np.iinfo(np.int32).min
@@ -207,7 +245,7 @@ def encode(values: np.ndarray, cfg: CompressionConfig = CompressionConfig(),
         if np.issubdtype(values.dtype, np.integer):
             ndt = _narrow_int_dtype(stats.vmin, stats.vmax)
             if ndt.itemsize < values.dtype.itemsize:
-                center = int((stats.vmin + stats.vmax) // 2)
+                center = int(_center_span(stats.vmin, stats.vmax)[0])
                 return make_plain((values.astype(np.int64) - center).astype(ndt),
                                   nrows=n, offset=center)
         return make_plain(values, nrows=n)
@@ -276,16 +314,206 @@ def dictionary_encode(values: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     return codes.astype(np.int32), dictionary
 
 
-def encoded_nbytes(col) -> int:
-    """In-memory footprint of an encoded column (for Fig. 10/19 benches)."""
+# ---------------------------------------------------------------------------
+# Sub-byte bit packing (DESIGN.md §11): host-side pack of integer buffers
+# into uint32 lanes at the exact bit width of their (lo, hi) domain. The
+# device-side inverse is kernels/unpack.py (Pallas) / ref.ref_unpack (XLA),
+# routed lazily at the consumers — packed buffers are what device_put
+# transfers, so H2D bytes shrink by ~bit_width/32 on dict-heavy columns.
+# ---------------------------------------------------------------------------
+
+
+def pack_bit_width(lo: int, hi: int) -> int:
+    """Bits needed for values in [lo, hi] stored as unsigned ``v - lo``."""
+    span = int(hi) - int(lo)
+    if span < 0:
+        return 33  # empty domain: never packs
+    return max(1, span.bit_length())
+
+
+def pack_array(values: np.ndarray, offset: int, bit_width: int) -> np.ndarray:
+    """Pack ``values`` as unsigned ``(v - offset) mod 2**bit_width`` codes,
+    densely concatenated into uint32 lanes (value i occupies bit range
+    [i*b, i*b+b) of the stream). Width 32 is an exact modular passthrough.
+    """
+    v = np.asarray(values).astype(np.int64)
+    n, b = v.size, int(bit_width)
+    nwords = (n * b + 31) // 32
+    words = np.zeros(nwords, np.uint32)
+    if n == 0:
+        return words
+    u = ((v - int(offset)) & ((1 << b) - 1)).astype(np.uint64)
+    bitpos = np.arange(n, dtype=np.int64) * b
+    w = bitpos >> 5
+    lo64 = u << (bitpos & 31).astype(np.uint64)
+    np.bitwise_or.at(words, w, (lo64 & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    hi = (lo64 >> np.uint64(32)).astype(np.uint32)
+    sel = hi != 0  # straddling values spill their high bits into lane w+1
+    if sel.any():
+        np.bitwise_or.at(words, w[sel] + 1, hi[sel])
+    return words
+
+
+def _pack_buf(buf, lo: int, hi: int, max_bits: int,
+              logical_offset: int = 0,
+              vs_bits: Optional[int] = None) -> Optional[PackedColumn]:
+    """PackedColumn for a host buffer whose LOGICAL values (buf +
+    ``logical_offset``) lie in [lo, hi], or None when packing does not
+    shrink it (non-integer dtype, empty, or bit width too wide).
+
+    ``vs_bits`` is the width packing competes against. It defaults to the
+    buffer's stored dtype, but when the caller packs against a GLOBAL
+    cross-partition domain it must be the logical int32 width (32): the
+    pack decision then depends only on the domain, never on how narrow
+    one partition's local range happened to be — otherwise partitions of
+    the same column would pack inconsistently (heterogeneous pytrees, one
+    jit trace per structure), exactly what the global domain exists to
+    prevent.
+    """
+    if isinstance(buf, PackedColumn):
+        return None  # already packed
+    a = np.asarray(buf)
+    if a.size == 0 or a.dtype.kind not in "iu":
+        return None
+    b = pack_bit_width(lo, hi)
+    if b > max_bits or b >= (a.dtype.itemsize * 8 if vs_bits is None
+                             else vs_bits):
+        return None  # no byte saving over the reference width
+    logical = a.astype(np.int64) + int(logical_offset)
+    words = pack_array(logical, int(lo), b)
+    return PackedColumn(words=jnp.asarray(words), nrows=int(a.size),
+                        bit_width=b, offset=int(lo))
+
+
+def _host_offset(offset) -> int:
+    return int(offset) if isinstance(offset, (int, np.integer)) else 0
+
+
+def _value_domain(buf, offset, pack_domain) -> Optional[Tuple[int, int]]:
+    """(lo, hi) of a value buffer's logical content: the ingest-recorded
+    global domain when given (partition-stable bit widths), else derived
+    from the buffer itself."""
+    if pack_domain is not None:
+        lo, size = int(pack_domain[0]), int(pack_domain[1])
+        return (lo, lo + size - 1)
+    a = np.asarray(buf)
+    if a.size == 0 or a.dtype.kind not in "iu":
+        return None
+    off = _host_offset(offset)
+    return (int(a.min()) + off, int(a.max()) + off)
+
+
+def pack_encoded(col, pack_domain: Optional[Tuple[int, int]] = None,
+                 max_bits: Optional[int] = None):
+    """Bit-pack an encoded column's integer buffers (host-side, at ingest).
+
+    * plain values / dictionary codes pack at the value domain's width
+      with the centering offset folded in (``PlainColumn.offset`` -> 0),
+    * RLE/Index VALUE buffers pack at the value domain widened to include
+      0 (capacity padding holds literal zeros, which must round-trip),
+    * RLE starts/ends and Index positions pack at ``bits(nrows)`` — the
+      sentinel ``nrows`` itself stays representable,
+    * float/bool buffers and widths past the policy's ``pack_max_bits``
+      stay raw (the transfer saving no longer pays for the unpack).
+    """
+    from repro.kernels import dispatch
+    pol = dispatch.policy()
+    if not pol.enable_pack:
+        return col
+    max_bits = pol.pack_max_bits if max_bits is None else max_bits
+
+    def vals_domain(buf, offset=0, pad_zero=False):
+        dom = _value_domain(buf, offset, pack_domain)
+        if dom is None:
+            return None
+        lo, hi = dom
+        if pad_zero:  # capacity-padding slots hold 0
+            lo, hi = min(lo, 0), max(hi, 0)
+        return lo, hi
+
+    # against a GLOBAL domain the pack decision must not see the local
+    # buffer dtype (see _pack_buf) — compete with the logical int32 width
+    vvs = 32 if pack_domain is not None else None
+
     if isinstance(col, PlainColumn):
-        return col.values.size * col.values.dtype.itemsize
+        dom = vals_domain(col.values, col.offset)
+        if dom is None:
+            return col
+        p = _pack_buf(col.values, dom[0], dom[1], max_bits,
+                      logical_offset=_host_offset(col.offset), vs_bits=vvs)
+        if p is None:
+            return col
+        return PlainColumn(values=p, nrows=col.nrows, offset=0)
+
     if isinstance(col, RLEColumn):
-        return sum(int(a.size * a.dtype.itemsize) for a in (col.values, col.starts, col.ends))
+        dom = vals_domain(col.values, pad_zero=True)
+        pv = (_pack_buf(col.values, dom[0], dom[1], max_bits, vs_bits=vvs)
+              if dom else None)
+        ps = _pack_buf(col.starts, 0, col.nrows, max_bits)
+        pe = _pack_buf(col.ends, 0, col.nrows, max_bits)
+        return RLEColumn(values=pv if pv is not None else col.values,
+                         starts=ps if ps is not None else col.starts,
+                         ends=pe if pe is not None else col.ends,
+                         n=col.n, nrows=col.nrows)
+
     if isinstance(col, IndexColumn):
-        return sum(int(a.size * a.dtype.itemsize) for a in (col.values, col.positions))
+        dom = vals_domain(col.values, pad_zero=True)
+        pv = (_pack_buf(col.values, dom[0], dom[1], max_bits, vs_bits=vvs)
+              if dom else None)
+        pp = _pack_buf(col.positions, 0, col.nrows, max_bits)
+        return IndexColumn(values=pv if pv is not None else col.values,
+                           positions=pp if pp is not None else col.positions,
+                           n=col.n, nrows=col.nrows)
+
     if isinstance(col, PlainIndexColumn):
-        return encoded_nbytes(col.base) + encoded_nbytes(col.outliers)
+        # the base's domain is the INLIER range (per-partition quantiles),
+        # never the column domain — derive it from the buffers; outlier
+        # values are wide by construction and typically stay raw
+        return PlainIndexColumn(base=pack_encoded(col.base, None, max_bits),
+                                outliers=pack_encoded(col.outliers, None,
+                                                      max_bits),
+                                nrows=col.nrows)
+
     if isinstance(col, RLEIndexColumn):
-        return encoded_nbytes(col.rle) + encoded_nbytes(col.idx)
+        return RLEIndexColumn(rle=pack_encoded(col.rle, pack_domain, max_bits),
+                              idx=pack_encoded(col.idx, pack_domain, max_bits),
+                              nrows=col.nrows)
+
+    return col
+
+
+def _buf_nbytes(a, unpacked: bool = False) -> int:
+    if isinstance(a, PackedColumn):
+        if unpacked:
+            # what whole-dtype narrowing of the SAME domain would occupy
+            # (the honest unpacked reference — NOT a flat int32): 9-bit
+            # codes would have shipped as int16, 7-bit measures as int8
+            b = a.bit_width
+            return int(a.nrows) * (1 if b <= 8 else 2 if b <= 16 else 4)
+        return int(a.words.size) * 4
+    return int(a.size * a.dtype.itemsize)
+
+
+def encoded_nbytes(col, unpacked: bool = False) -> int:
+    """In-memory footprint of an encoded column (for Fig. 10/19 benches).
+
+    ``unpacked=True`` counts bit-packed buffers at the whole-dtype width
+    the §9 narrowing would have used for the same domain — the two
+    together are the packed-vs-unpacked side-by-side that bench_memory /
+    bench_compress report.
+    """
+    if isinstance(col, PlainColumn):
+        return _buf_nbytes(col.values, unpacked)
+    if isinstance(col, RLEColumn):
+        return sum(_buf_nbytes(a, unpacked)
+                   for a in (col.values, col.starts, col.ends))
+    if isinstance(col, IndexColumn):
+        return sum(_buf_nbytes(a, unpacked)
+                   for a in (col.values, col.positions))
+    if isinstance(col, PlainIndexColumn):
+        return (encoded_nbytes(col.base, unpacked)
+                + encoded_nbytes(col.outliers, unpacked))
+    if isinstance(col, RLEIndexColumn):
+        return (encoded_nbytes(col.rle, unpacked)
+                + encoded_nbytes(col.idx, unpacked))
     raise TypeError(type(col))

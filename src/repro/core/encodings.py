@@ -47,6 +47,66 @@ def static(**kw):
 
 @_register
 @dataclasses.dataclass(frozen=True)
+class PackedColumn:
+    """Bit-packed integer buffer leaf (paper §3.2 taken sub-byte; §11).
+
+    Stands in for a ``jax.Array`` in the buffer slots of the other
+    encodings (plain values / dictionary codes, RLE values/starts/ends,
+    index values/positions): unsigned ``bit_width``-bit codes densely
+    packed into uint32 lanes, logical value = code + ``offset`` (int32,
+    wrap-add — width-32 passthrough is exact by modular arithmetic).
+    Packing is computed host-side at ingest (compress.pack_array) from the
+    column's exact ``(lo, hi)`` domain, so a 9-bit dictionary code ships 9
+    bits over PCIe instead of the 16/32 a whole-dtype narrowing would.
+
+    Unpacking is LAZY and on-device: consumers call ``unpack_values`` /
+    ``.unpack()``, which routes through ``dispatch.unpack`` (Pallas
+    shift+mask kernel on TPU, inline XLA expression elsewhere) at TRACE
+    time — inside the one jitted query program, where XLA fuses the
+    extraction into the consumer instead of materializing a full-width
+    copy in HBM. ``offset`` is a traced data leaf (like
+    ``PlainColumn.offset``) so per-partition domains never retrace;
+    ``bit_width``/``nrows`` are static because buffer shapes derive from
+    them.
+
+    ``nrows`` is the logical element count of the packed vector — rows
+    for a plain payload, capacity for run/point buffers.
+    """
+
+    words: jax.Array  # uint32[ceil(nrows * bit_width / 32)]
+    nrows: int = static(default=0)
+    bit_width: int = static(default=32)
+    offset: Any = 0
+
+    # array-metadata duck-typing: capacity/shape probes on encodings whose
+    # buffers are packed keep working without unpacking
+    @property
+    def shape(self):
+        return (self.nrows,)
+
+    @property
+    def size(self) -> int:
+        return self.nrows
+
+    @property
+    def dtype(self):
+        return jnp.int32  # logical (unpacked) dtype
+
+    def unpack(self) -> jax.Array:
+        from repro.kernels import dispatch
+        return dispatch.unpack(self)
+
+
+def unpack_values(x):
+    """Materialize a buffer slot: identity for arrays, routed lazy unpack
+    for ``PackedColumn`` leaves. The single choke point every buffer READ
+    goes through — under jit the unpack traces inline at the consumer, so
+    XLA fuses (and CSEs) the shift+mask with whatever reads the values."""
+    return x.unpack() if isinstance(x, PackedColumn) else x
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
 class PlainColumn:
     """Plain (uncompressed) column: 1:1 row-to-slot mapping (paper §3.1).
 
@@ -72,7 +132,7 @@ class PlainColumn:
         The device value domain is int32 (DESIGN.md §3) — wider integers are
         dictionary-encoded at ingest — so centering always widens to int32.
         """
-        v = self.values
+        v = unpack_values(self.values)  # packed: offset folded into unpack
         if not offset_is_zero(self.offset):
             v = v.astype(jnp.int32 if jnp.issubdtype(v.dtype, jnp.integer) else v.dtype)
             v = v + self.offset
@@ -108,7 +168,9 @@ class RLEColumn:
     def lengths(self) -> jax.Array:
         """Run lengths (0 for padding slots)."""
         valid = jnp.arange(self.capacity) < self.n
-        return jnp.where(valid, self.ends - self.starts + 1, 0)
+        return jnp.where(
+            valid, unpack_values(self.ends) - unpack_values(self.starts) + 1,
+            0)
 
 
 @_register
@@ -308,6 +370,7 @@ def _run_id_per_row(starts, n, nrows: int) -> jax.Array:
     CPU backend and the same asymptotics on TPU (cumsum = efficient
     reduce-window). Sentinel starts (== nrows) drop out of range.
     """
+    starts = unpack_values(starts)
     valid = valid_slots(n, starts.shape[0])
     delta = jnp.zeros((nrows + 1,), POS_DTYPE).at[starts].add(
         jnp.where(valid, 1, 0), mode="drop")
@@ -323,21 +386,23 @@ def decode_rle_values(col: RLEColumn, fill=0) -> jax.Array:
     (row <= run end) instead of a second delta sweep; on the CPU backend
     every 2M-row pass is ~4 ms, so pass count is the whole game."""
     from repro.kernels import dispatch
-    routed = dispatch.maybe_rle_decode(col.values, col.starts, col.ends,
+    starts, ends = unpack_values(col.starts), unpack_values(col.ends)
+    routed = dispatch.maybe_rle_decode(col.values, starts, ends,
                                        col.n, col.nrows, fill)
     if routed is not None:
         return routed
-    run_raw = _run_id_per_row(col.starts, col.n, col.nrows)
+    run_raw = _run_id_per_row(starts, col.n, col.nrows)
     run = jnp.clip(run_raw, 0, col.capacity - 1).astype(POS_DTYPE)
     rows = jnp.arange(col.nrows, dtype=POS_DTYPE)
-    cov = (run_raw >= 0) & (rows <= col.ends[run]) & (run_raw < col.n)
-    vals = col.values[run]
+    cov = (run_raw >= 0) & (rows <= ends[run]) & (run_raw < col.n)
+    vals = unpack_values(col.values)[run]
     return jnp.where(cov, vals, jnp.asarray(fill, vals.dtype))
 
 
 def decode_rle_coverage(starts, ends, n, nrows: int) -> jax.Array:
     """Boolean [nrows]: true where some run covers the row. O(n) sweep:
     +1 at run starts, -1 after run ends, prefix sum > 0."""
+    starts, ends = unpack_values(starts), unpack_values(ends)
     valid = valid_slots(n, starts.shape[0])
     one = jnp.where(valid, 1, 0)
     delta = jnp.zeros((nrows + 1,), POS_DTYPE)
@@ -349,11 +414,13 @@ def decode_rle_coverage(starts, ends, n, nrows: int) -> jax.Array:
 def decode_index_values(col: IndexColumn, fill=0) -> jax.Array:
     # Sentinel slots hold positions == nrows, which fall outside the output
     # and are dropped by mode="drop".
-    out = jnp.full((col.nrows,), fill, col.values.dtype)
-    return out.at[col.positions].set(col.values, mode="drop")
+    vals = unpack_values(col.values)
+    out = jnp.full((col.nrows,), fill, vals.dtype)
+    return out.at[unpack_values(col.positions)].set(vals, mode="drop")
 
 
 def decode_index_coverage(positions, n, nrows: int) -> jax.Array:
+    positions = unpack_values(positions)
     out = jnp.zeros((nrows,), jnp.bool_)
     valid = valid_slots(n, positions.shape[0])
     return out.at[positions].set(valid, mode="drop")

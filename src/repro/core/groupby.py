@@ -37,6 +37,7 @@ from repro.core.encodings import (
     coverage,
     decode_column,
     decode_mask,
+    unpack_values,
     valid_slots,
 )
 
@@ -63,11 +64,15 @@ def _is_position_explicit(c) -> bool:
 
 
 def _as_runs(c):
-    """(values, starts, ends, n) — Index columns become unit-length runs."""
+    """(values, starts, ends, n) — Index columns become unit-length runs.
+    Bit-packed buffers unpack here, at the consumer (DESIGN.md §11): the
+    group-by key path then fuses the shift+mask into its key scatter."""
     if isinstance(c, RLEColumn):
-        return c.values, c.starts, c.ends, c.n
+        return (unpack_values(c.values), unpack_values(c.starts),
+                unpack_values(c.ends), c.n)
     if isinstance(c, IndexColumn):
-        return c.values, c.positions, c.positions, c.n
+        pos = unpack_values(c.positions)
+        return unpack_values(c.values), pos, pos, c.n
     raise TypeError(type(c))
 
 

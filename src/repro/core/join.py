@@ -32,6 +32,7 @@ from repro.core.encodings import (
     RLEIndexColumn,
     RLEMask,
     decode_column,
+    unpack_values,
     valid_slots,
 )
 from repro.kernels import dispatch
@@ -58,11 +59,13 @@ def join_entries(col) -> JoinEntries:
             n=jnp.asarray(nr, jnp.int32),
         )
     if isinstance(col, RLEColumn):
-        return JoinEntries(keys=col.values, row_start=col.starts,
+        return JoinEntries(keys=unpack_values(col.values),
+                           row_start=unpack_values(col.starts),
                            length=col.lengths.astype(POS_DTYPE), n=col.n)
     if isinstance(col, IndexColumn):
         valid = valid_slots(col.n, col.capacity)
-        return JoinEntries(keys=col.values, row_start=col.positions,
+        return JoinEntries(keys=unpack_values(col.values),
+                           row_start=unpack_values(col.positions),
                            length=jnp.where(valid, 1, 0).astype(POS_DTYPE), n=col.n)
     raise TypeError(type(col))
 
@@ -153,16 +156,18 @@ def gather_rows(col, rows: jax.Array, valid: jax.Array):
     if isinstance(col, PlainColumn):
         vals = col.decode()[rows]
     elif isinstance(col, RLEColumn):
-        run = dispatch.bucketize(col.ends, rows, right=False).astype(POS_DTYPE)
+        starts, ends = unpack_values(col.starts), unpack_values(col.ends)
+        run = dispatch.bucketize(ends, rows, right=False).astype(POS_DTYPE)
         run = jnp.minimum(run, col.capacity - 1)
-        inside = (rows >= col.starts[run]) & (rows <= col.ends[run]) & (run < col.n)
-        vals = jnp.where(inside, col.values[run], 0)
+        inside = (rows >= starts[run]) & (rows <= ends[run]) & (run < col.n)
+        vals = jnp.where(inside, unpack_values(col.values)[run], 0)
     elif isinstance(col, IndexColumn):
-        slot = dispatch.bucketize(col.positions, rows,
+        positions = unpack_values(col.positions)
+        slot = dispatch.bucketize(positions, rows,
                                   right=False).astype(POS_DTYPE)
         slot = jnp.minimum(slot, col.capacity - 1)
-        hit = (col.positions[slot] == rows) & (slot < col.n)
-        vals = jnp.where(hit, col.values[slot], 0)
+        hit = (positions[slot] == rows) & (slot < col.n)
+        vals = jnp.where(hit, unpack_values(col.values)[slot], 0)
     else:
         raise TypeError(type(col))
     return jnp.where(valid, vals, 0)
@@ -199,9 +204,12 @@ def pk_fk_join(fact_key_col, dim_keys: jax.Array, n_dim: jax.Array,
                                    nrows=fact_key_col.nrows)
 
     def probe(keys, kvalid):
+        # packed fact keys route to the fused unpack->bisect kernel; the
+        # membership equality reads the (lazily) unpacked codes, which XLA
+        # CSEs with any other consumer of the same extraction
         slot = dispatch.bucketize(dim_keys, keys, right=False)
         slot_c = jnp.minimum(slot, dim_keys.shape[0] - 1)
-        hit = kvalid & (slot < n_dim) & (dim_keys[slot_c] == keys)
+        hit = kvalid & (slot < n_dim) & (dim_keys[slot_c] == unpack_values(keys))
         return slot_c, hit
 
     def gathered_values(p, slot, hit):
@@ -219,8 +227,9 @@ def pk_fk_join(fact_key_col, dim_keys: jax.Array, n_dim: jax.Array,
     if isinstance(fact_key_col, RLEColumn):
         c = fact_key_col
         slot, hit = probe(c.values, valid_slots(c.n, c.capacity))
-        (s, e), n = prim.compact(hit, (c.starts, c.ends), c.capacity,
-                                 (c.nrows, c.nrows))
+        (s, e), n = prim.compact(
+            hit, (unpack_values(c.starts), unpack_values(c.ends)), c.capacity,
+            (c.nrows, c.nrows))
         mask = RLEMask(starts=s, ends=e, n=n, nrows=c.nrows)
         # gathered columns keep the fact key's FULL run structure (misses
         # hold ``fill`` and are excluded by the mask), so later alignment
@@ -234,7 +243,8 @@ def pk_fk_join(fact_key_col, dim_keys: jax.Array, n_dim: jax.Array,
     if isinstance(fact_key_col, IndexColumn):
         c = fact_key_col
         slot, hit = probe(c.values, valid_slots(c.n, c.capacity))
-        (pos,), n = prim.compact(hit, (c.positions,), c.capacity, (c.nrows,))
+        (pos,), n = prim.compact(hit, (unpack_values(c.positions),),
+                                 c.capacity, (c.nrows,))
         mask = IndexMask(positions=pos, n=n, nrows=c.nrows)
         gathered = {
             name: IndexColumn(values=gathered_values(p, slot, hit),
@@ -258,20 +268,23 @@ def semi_join_mask(left, right_keys: jax.Array, n_right: jax.Array):
     pass/fail together (App. D's 'early filtering of entire runs').
     """
     def member(keys, kvalid):
+        # packed left keys hit the fused unpack->bisect kernel (DESIGN §11)
         lo = dispatch.bucketize(right_keys, keys, right=False)
         lo_c = jnp.minimum(lo, right_keys.shape[0] - 1)
-        return kvalid & (lo < n_right) & (right_keys[lo_c] == keys)
+        return kvalid & (lo < n_right) & (right_keys[lo_c] == unpack_values(keys))
 
     if isinstance(left, PlainColumn):
         return PlainMask(values=member(left.decode(), True), nrows=left.nrows)
     if isinstance(left, RLEColumn):
         keep = member(left.values, valid_slots(left.n, left.capacity))
-        (s, e), n = prim.compact(keep, (left.starts, left.ends), left.capacity,
-                                 (left.nrows, left.nrows))
+        (s, e), n = prim.compact(
+            keep, (unpack_values(left.starts), unpack_values(left.ends)),
+            left.capacity, (left.nrows, left.nrows))
         return RLEMask(starts=s, ends=e, n=n, nrows=left.nrows)
     if isinstance(left, IndexColumn):
         keep = member(left.values, valid_slots(left.n, left.capacity))
-        (p,), n = prim.compact(keep, (left.positions,), left.capacity, (left.nrows,))
+        (p,), n = prim.compact(keep, (unpack_values(left.positions),),
+                               left.capacity, (left.nrows,))
         return IndexMask(positions=p, n=n, nrows=left.nrows)
     raise TypeError(type(left))
 

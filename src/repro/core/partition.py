@@ -125,6 +125,7 @@ class PartitionedTable:
         partition_rows: Optional[int] = None,
         boundaries: Optional[Sequence[int]] = None,
         encodings: Optional[Dict[str, str]] = None,
+        pack: Optional[bool] = None,
     ) -> "PartitionedTable":
         """Ingest host arrays into row-range partitions.
 
@@ -133,6 +134,12 @@ class PartitionedTable:
         cut offsets strictly inside (0, nrows). Encodings are chosen (or
         forced via ``encodings``) independently PER PARTITION — a column can
         be RLE in a sorted region and Plain in a high-entropy one.
+
+        ``pack=True`` (or ``cfg.pack``) bit-packs integer buffers
+        (DESIGN.md §11) at the width of the GLOBAL value domains computed
+        below, so every partition shares one bit width per column and the
+        streamed ``device_put`` ships the packed words — H2D bytes drop by
+        ~bit_width/32 with zero extra jit cache entries.
         """
         data, dicts = dictionary_pass(data)
         # narrow to the device value domain BEFORE zone maps: encode() will
@@ -152,6 +159,8 @@ class PartitionedTable:
                                      boundaries)
         if cfg.capacity_bucket is None:
             cfg = dataclasses.replace(cfg, capacity_bucket="pow2")
+        if pack is not None:
+            cfg = dataclasses.replace(cfg, pack=pack)
         parts = []
         for start, end in zip(offsets[:-1], offsets[1:]):
             rows = end - start
@@ -168,7 +177,8 @@ class PartitionedTable:
             # at execution is the FIRST accelerator transfer.
             with jax.default_device(jax.devices("cpu")[0]):
                 t = Table.from_arrays(sliced, cfg=cfg, encodings=encodings,
-                                      dictionaries=dicts)
+                                      dictionaries=dicts,
+                                      pack_domains=domains)
             t.columns = _host_leaves(t.columns)
             parts.append(Partition(table=t, rows=rows, padded_rows=padded,
                                    row_offset=start, zone_lo=zone_lo,
@@ -199,10 +209,22 @@ class PartitionedTable:
         return vals
 
     def nbytes(self) -> int:
+        """Actual host footprint (bit-packed buffers at packed size) — also
+        the total H2D bytes of a no-skip streamed execution, since
+        ``device_put`` ships the packed words verbatim."""
         return sum(p.nbytes() for p in self.partitions)
 
-    def max_partition_nbytes(self) -> int:
+    def nbytes_unpacked(self) -> int:
+        """Footprint with packed buffers at the whole-dtype width the §9
+        narrowing would pick for the same domain: the honest
+        packed-vs-unpacked side-by-side (DESIGN.md §11)."""
+        return sum(p.table.nbytes_unpacked() for p in self.partitions)
+
+    def max_partition_nbytes(self, unpacked: bool = False) -> int:
         """Peak per-partition device footprint of the streamed execution."""
+        if unpacked:
+            return max((p.table.nbytes_unpacked()
+                        for p in self.partitions if p.rows), default=0)
         return max((p.nbytes() for p in self.partitions if p.rows), default=0)
 
 
@@ -226,15 +248,38 @@ def _partition_offsets(n, num_partitions, partition_rows, boundaries):
     return [min(i * step, n) for i in range(k)] + [n]
 
 
-def rows_for_budget(data: Dict[str, np.ndarray], budget_bytes: int) -> int:
+def rows_for_budget(data: Dict[str, np.ndarray], budget_bytes: int,
+                    pack: bool = False) -> int:
     """Partition row count so each partition's UNCOMPRESSED working set fits
-    ``budget_bytes`` (the out-of-core sizing rule, DESIGN.md §4)."""
-    row_bytes = 0
+    ``budget_bytes`` (the out-of-core sizing rule, DESIGN.md §4).
+
+    With ``pack=True`` integer/dictionary columns are sized at their
+    packed bit width (DESIGN.md §11) instead of a whole dtype, so strictly
+    more rows fit the same budget on dict-heavy schemas. The policy's
+    ``enable_pack`` kill switch (REPRO_PACK=0) is honored here exactly as
+    ingest honors it — sizing by packed bits while ingest ships unpacked
+    buffers would silently overrun the device budget.
+    """
+    from repro.kernels import dispatch
+    pack = pack and dispatch.policy().enable_pack
+    max_bits = dispatch.policy().pack_max_bits
+    row_bits = 0
     for arr in data.values():
         arr = np.asarray(arr)
-        # strings dictionary-encode to int32 codes on device
-        row_bytes += 4 if arr.dtype.kind in ("U", "S", "O") else arr.dtype.itemsize
-    return max(int(budget_bytes // max(row_bytes, 1)), 1)
+        if arr.dtype.kind in ("U", "S", "O"):
+            # strings dictionary-encode to int32 codes on device; packed,
+            # the code space is the distinct-value count
+            bits = 32
+            if pack and arr.size:
+                b = compress.pack_bit_width(0, len(np.unique(arr)) - 1)
+                bits = b if b <= max_bits else 32
+        elif pack and arr.dtype.kind in "iu" and arr.size:
+            b = compress.pack_bit_width(int(arr.min()), int(arr.max()))
+            bits = b if b <= max_bits else arr.dtype.itemsize * 8
+        else:
+            bits = arr.dtype.itemsize * 8
+        row_bits += bits
+    return max(int(budget_bytes * 8 // max(row_bits, 1)), 1)
 
 
 # ---------------------------------------------------------------------------

@@ -34,6 +34,7 @@ from repro.core.encodings import (
     RLEIndexColumn,
     decode_column,
     decode_mask,
+    unpack_values,
 )
 from repro.core.table import Table
 from repro.kernels import dispatch
@@ -940,9 +941,11 @@ def pk_fk_gather(fact_key_col, dim_keys_sorted: jax.Array, dim_payload: jax.Arra
     column in the fact key's encoding with payload values.
     """
     def lookup(keys):
+        # packed run/point keys go to the fused unpack->bisect kernel;
+        # the hit test reads the lazily unpacked codes (XLA CSEs them)
         slot = dispatch.bucketize(dim_keys_sorted, keys, right=False)
         slot_c = jnp.minimum(slot, dim_keys_sorted.shape[0] - 1)
-        hit = dim_keys_sorted[slot_c] == keys
+        hit = dim_keys_sorted[slot_c] == unpack_values(keys)
         vals = dim_payload[slot_c]
         return jnp.where(hit, vals, jnp.asarray(fill, vals.dtype))
 

@@ -25,6 +25,7 @@ from repro.core.encodings import (
     RLEColumn,
     RLEMask,
     pad_positions,
+    unpack_values,
     valid_slots,
 )
 from repro.kernels import dispatch
@@ -478,11 +479,13 @@ def compact_rle(rs, re, n, nrows: int):
 
 def rle_to_index(values, rs, re, n, nrows: int, cap_out: int):
     """Expand runs to individual (value, position) pairs."""
+    rs, re = unpack_values(rs), unpack_values(re)
     cap = rs.shape[0]
     lengths = jnp.where(valid_slots(n, cap), re - rs + 1, 0)
     pos, src, valid, n_out = range_arange_capped(rs, lengths, cap_out)
     pos = jnp.where(valid, pos, jnp.asarray(nrows, POS_DTYPE))
-    vals = jnp.where(valid, values[src], 0) if values is not None else None
+    vals = (jnp.where(valid, unpack_values(values)[src], 0)
+            if values is not None else None)
     return vals, pos, n_out
 
 
@@ -493,6 +496,7 @@ def rle_to_plain(values, rs, re, n, nrows: int, fill=0):
     the policy picks it, otherwise the O(n) scatter+cumsum sweep (see
     encodings._run_id_per_row for why not binary search per row)."""
     from repro.core.encodings import _run_id_per_row, decode_rle_coverage
+    rs, re = unpack_values(rs), unpack_values(re)
     if values is None:
         return decode_rle_coverage(rs, re, n, nrows)
     routed = dispatch.maybe_rle_decode(values, rs, re, n, nrows, fill)
@@ -500,6 +504,7 @@ def rle_to_plain(values, rs, re, n, nrows: int, fill=0):
         return routed
     covered = decode_rle_coverage(rs, re, n, nrows)
     run = jnp.clip(_run_id_per_row(rs, n, nrows), 0, rs.shape[0] - 1)
+    values = unpack_values(values)
     return jnp.where(covered, values[run], jnp.asarray(fill, values.dtype))
 
 

@@ -93,17 +93,28 @@ class Table:
         cfg: compress.CompressionConfig = compress.CompressionConfig(),
         encodings: Optional[Dict[str, str]] = None,
         dictionaries: Optional[Dict[str, np.ndarray]] = None,
+        pack: Optional[bool] = None,
+        pack_domains: Optional[Dict[str, Tuple[int, int]]] = None,
     ) -> "Table":
         """Ingest host arrays; choose encodings per the §9 heuristics unless
         overridden per-column via ``encodings``.
 
         ``dictionaries``: pre-computed global dictionaries (partitioned
         ingest) — ``data`` must already hold codes for those columns.
+
+        ``pack=True`` bit-packs integer buffers at their exact domain
+        width (DESIGN.md §11) — a 9-bit dictionary code then occupies 9
+        bits in memory and over PCIe, unpacked lazily on device.
+        ``pack_domains`` (name -> ``(lo, size)``) overrides the per-table
+        domains; partitioned ingest passes the GLOBAL domains so all
+        partitions share one bit width per column.
         """
         if dictionaries is None:
             data, dicts = dictionary_pass(data)
         else:
             dicts = dictionaries
+        if pack is not None:
+            cfg = dataclasses.replace(cfg, pack=pack)
         cols = {}
         domains = {}
         nrows = None
@@ -111,8 +122,10 @@ class Table:
             arr = np.asarray(arr)
             nrows = len(arr) if nrows is None else nrows
             enc = (encodings or {}).get(name)
-            cols[name] = compress.encode(arr, cfg, encoding=enc)
             dom = compress.column_domain(arr, dicts.get(name))
+            pdom = (pack_domains or {}).get(name, dom)
+            cols[name] = compress.encode(arr, cfg, encoding=enc,
+                                         pack_domain=pdom)
             if dom is not None:
                 domains[name] = dom
         return cls(columns=cols, nrows=nrows or 0, dictionaries=dicts,
@@ -159,7 +172,15 @@ class Table:
         return self._sort_orders[name]
 
     def nbytes(self) -> int:
+        """Actual in-memory footprint (bit-packed buffers at packed size)."""
         return sum(compress.encoded_nbytes(c) for c in self.columns.values())
+
+    def nbytes_unpacked(self) -> int:
+        """Footprint with packed buffers counted at the whole-dtype width
+        the §9 narrowing would use for the same domain — the honest
+        packed-vs-unpacked side-by-side (DESIGN.md §11)."""
+        return sum(compress.encoded_nbytes(c, unpacked=True)
+                   for c in self.columns.values())
 
     def encoding_of(self, name: str) -> str:
         return type(self.columns[name]).__name__

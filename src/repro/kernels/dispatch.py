@@ -15,7 +15,8 @@ Policy resolution, in order:
   2. environment variables at import (``REPRO_USE_PALLAS`` = ``1``/``0``/
      ``auto``, ``REPRO_SORT_FREE``, ``REPRO_SORT_FREE_MAX_DOMAIN``,
      ``REPRO_BUCKETIZE_MIN_QUERIES``, ``REPRO_RLE_DECODE_MIN_ROWS``,
-     ``REPRO_SEGSUM_MAX_GROUPS``),
+     ``REPRO_SEGSUM_MAX_GROUPS``, ``REPRO_PACK``, ``REPRO_PACK_MAX_BITS``,
+     ``REPRO_UNPACK_MIN_VALS``),
   3. defaults: Pallas on TPU backends only (interpret mode elsewhere is a
      correctness harness, not a fast path), size thresholds below which
      the fused XLA op wins regardless of backend.
@@ -43,6 +44,13 @@ from repro.kernels.bucketize import (
 from repro.kernels.rle_decode import rle_decode_kernel
 from repro.kernels.segment_reduce import segment_sum_kernel
 from repro.kernels.topk import MAX_KERNEL_K, topk_kernel
+from repro.kernels.unpack import (
+    MAX_VMEM_WORDS,
+    bucketize_packed_kernel,
+    rle_decode_packed_kernel,
+    unpack_kernel,
+)
+from repro.kernels import ref as ref_mod
 
 # dtypes the 1-D kernels handle natively (4-byte words; narrower dtypes
 # keep the XLA path — their TPU tile shapes differ and the engine only
@@ -81,6 +89,16 @@ class DispatchPolicy:
     # Off -> every ORDER BY decodes to rows first (the paper's row-level
     # baseline; benchmarks/bench_orderby.py measures the gap).
     enable_entry_order: bool = True
+    # bit packing (DESIGN.md §11): ingest-time sub-byte packing of integer
+    # buffers (consulted by compress.encode when the caller requests
+    # pack=True) + trace-time unpack routing. ``pack_max_bits`` bounds
+    # which domains pack — above it the 32->bits transfer saving no longer
+    # pays for the shift+mask work; 24 bits = a guaranteed >= 25% cut.
+    enable_pack: bool = True
+    pack_max_bits: int = 24
+    # below this many values the standalone unpack is latency-bound and
+    # the inline XLA expression wins even on TPU.
+    unpack_min_vals: int = 4096
 
     def pallas_enabled(self) -> bool:
         if self.use_pallas is not None:
@@ -115,6 +133,7 @@ def policy_from_env(env=None) -> DispatchPolicy:
     base = DispatchPolicy()
     sort_free = _env_tristate(env, "REPRO_SORT_FREE")
     entry_order = _env_tristate(env, "REPRO_ENTRY_ORDER")
+    pack = _env_tristate(env, "REPRO_PACK")
     return DispatchPolicy(
         use_pallas=_env_tristate(env, "REPRO_USE_PALLAS"),
         interpret=_env_tristate(env, "REPRO_PALLAS_INTERPRET"),
@@ -133,6 +152,10 @@ def policy_from_env(env=None) -> DispatchPolicy:
         topk_min_rows=_env_int(env, "REPRO_TOPK_MIN_ROWS", base.topk_min_rows),
         topk_max_k=_env_int(env, "REPRO_TOPK_MAX_K", base.topk_max_k),
         enable_entry_order=True if entry_order is None else entry_order,
+        enable_pack=True if pack is None else pack,
+        pack_max_bits=_env_int(env, "REPRO_PACK_MAX_BITS", base.pack_max_bits),
+        unpack_min_vals=_env_int(env, "REPRO_UNPACK_MIN_VALS",
+                                 base.unpack_min_vals),
     )
 
 
@@ -169,10 +192,52 @@ def _kernel_ok(*arrays) -> bool:
     return all(a.dtype in _KERNEL_DTYPES for a in arrays)
 
 
-def bucketize(boundaries: jax.Array, queries: jax.Array,
-              right: bool = True) -> jax.Array:
-    """torch.bucketize == searchsorted (right=True -> side='right')."""
+def _is_packed(x) -> bool:
+    # lazy import: dispatch sits below core in the layering, but the
+    # PackedColumn leaf lives with the other encodings
+    from repro.core.encodings import PackedColumn
+    return isinstance(x, PackedColumn)
+
+
+def unpack(packed) -> jax.Array:
+    """Expand a ``PackedColumn`` buffer leaf to its logical int32 values.
+
+    Pallas shift+mask kernel when the policy allows and the stream clears
+    the size thresholds, else the inline XLA expression (``ref_unpack``) —
+    which traces at the CALLER, so XLA fuses the extraction into the
+    consuming op instead of materializing the full-width tensor.
+    """
     pol = policy()
+    n, words = packed.nrows, packed.words
+    if (pol.pallas_enabled() and n >= pol.unpack_min_vals
+            and 0 < words.shape[0] <= MAX_VMEM_WORDS):
+        return unpack_kernel(words, packed.bit_width, packed.offset, n,
+                             interpret=pol.interpret_mode())
+    return ref_mod.ref_unpack(words, packed.bit_width, packed.offset, n)
+
+
+def bucketize(boundaries: jax.Array, queries, right: bool = True) -> jax.Array:
+    """torch.bucketize == searchsorted (right=True -> side='right').
+
+    ``queries`` may be a ``PackedColumn``: the Pallas route then runs the
+    FUSED unpack->bisect kernel (codes extracted in-register, never
+    materialized — the PK-FK probe / semi-join hot path on packed
+    dictionary FKs), and the XLA route inlines the unpack expression into
+    the searchsorted so fusion is XLA's to do.
+    """
+    pol = policy()
+    if _is_packed(queries):
+        n_b, n_q = boundaries.shape[0], queries.nrows
+        if (pol.pallas_enabled() and n_b > 0
+                and n_q >= pol.bucketize_min_queries
+                and n_b <= pol.bucketize_max_vmem_boundaries
+                and 0 < queries.words.shape[0] <= MAX_VMEM_WORDS
+                and _kernel_ok(boundaries)):
+            return bucketize_packed_kernel(
+                boundaries, queries.words, queries.bit_width, queries.offset,
+                n_q, right, interpret=pol.interpret_mode())
+        queries = ref_mod.ref_unpack(queries.words, queries.bit_width,
+                                     queries.offset, n_q)
     n_b, n_q = boundaries.shape[0], queries.shape[0]
     if (pol.pallas_enabled() and n_b > 0
             and n_q >= pol.bucketize_min_queries
@@ -191,14 +256,29 @@ def maybe_rle_decode(values, starts, ends, n, nrows: int, fill=0):
     """Kernel-decoded dense [nrows] array, or None when the policy routes
     to the caller's XLA formulation (the O(n) scatter+cumsum sweep in
     ``encodings.decode_rle_values`` — the call site owns its fallback
-    because it is already the tuned XLA implementation)."""
+    because it is already the tuned XLA implementation, and it unpacks
+    packed run values lazily itself).
+
+    ``values`` may be a ``PackedColumn``: the kernel route then gathers
+    run values straight out of the packed words (run id -> lane/shift,
+    fused — no unpacked value buffer in HBM).
+    """
     pol = policy()
-    if (pol.pallas_enabled() and nrows >= pol.rle_decode_min_rows
-            and starts.shape[0] > 0 and _kernel_ok(values, starts, ends)):
-        return rle_decode_kernel(values, starts, ends,
-                                 jnp.asarray(n, jnp.int32), nrows, fill,
-                                 interpret=pol.interpret_mode())
-    return None
+    if not (pol.pallas_enabled() and nrows >= pol.rle_decode_min_rows
+            and starts.shape[0] > 0 and _kernel_ok(starts, ends)):
+        return None
+    if _is_packed(values):
+        if not (0 < values.words.shape[0] <= MAX_VMEM_WORDS):
+            return None
+        return rle_decode_packed_kernel(
+            values.words, values.bit_width, values.offset, starts.shape[0],
+            starts, ends, jnp.asarray(n, jnp.int32), nrows, fill,
+            interpret=pol.interpret_mode())
+    if not _kernel_ok(values):
+        return None
+    return rle_decode_kernel(values, starts, ends,
+                             jnp.asarray(n, jnp.int32), nrows, fill,
+                             interpret=pol.interpret_mode())
 
 
 def segment_sum(values: jax.Array, segment_ids: jax.Array,

@@ -29,6 +29,7 @@ from repro.kernels.bucketize import (
 from repro.kernels.dispatch import MAX_MATMUL_SEGMENTS
 from repro.kernels.rle_decode import rle_decode_kernel
 from repro.kernels.segment_reduce import segment_sum_kernel
+from repro.kernels.unpack import unpack_kernel
 
 
 def default_interpret() -> bool:
@@ -59,6 +60,18 @@ def rle_decode(values, starts, ends, n, nrows: int, fill=0,
         return ref.ref_rle_decode(values, starts, ends, n, nrows, fill)
     interp = default_interpret() if interpret is None else interpret
     return rle_decode_kernel(values, starts, ends, n, nrows, fill, interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("bit_width", "nvals", "use_pallas", "interpret"))
+def unpack(words, bit_width: int, offset, nvals: int,
+           use_pallas: bool = False, interpret: bool | None = None):
+    """Expand a bit-packed uint32 stream to int32[nvals] (DESIGN.md §11)."""
+    if nvals == 0 or words.shape[0] == 0:
+        return jnp.zeros((0,), jnp.int32)
+    if not use_pallas:
+        return ref.ref_unpack(words, bit_width, offset, nvals)
+    interp = default_interpret() if interpret is None else interpret
+    return unpack_kernel(words, bit_width, offset, nvals, interpret=interp)
 
 
 @partial(jax.jit, static_argnames=("num_segments", "reduce", "use_pallas", "interpret"))

@@ -26,6 +26,18 @@ def ref_rle_decode(values: jnp.ndarray, starts: jnp.ndarray, ends: jnp.ndarray,
     return jnp.where(covered, values[run], jnp.asarray(fill, values.dtype))
 
 
+def ref_unpack(words: jnp.ndarray, bit_width: int, offset, nvals: int):
+    """Expand a bit-packed uint32 stream to int32[nvals] (DESIGN.md §11):
+    value i = bits [i*b, i*b+b) of the stream, bitcast + wrap-add offset.
+    Pure-XLA twin of ``unpack.unpack_kernel`` — inlined at consumers so the
+    shift+mask fuses into whatever reads the column."""
+    from repro.kernels.unpack import _extract, _to_signed
+    if nvals == 0:
+        return jnp.zeros((0,), jnp.int32)
+    idx = jnp.arange(nvals, dtype=jnp.int32)
+    return _to_signed(_extract(words, idx, bit_width, words.shape[0]), offset)
+
+
 def ref_segment_reduce(values: jnp.ndarray, segment_ids: jnp.ndarray,
                        num_segments: int, reduce: str = "sum"):
     """Segment reduction by id (ids need NOT be sorted for the oracle)."""
