@@ -32,7 +32,7 @@ import jax
 from repro.core import compress
 from repro.core.partition import PartitionedQuery, PartitionedTable
 from repro.core.plan import col
-from benchmarks.common import ART_DIR, count_h2d, time_fn
+from benchmarks.common import ART_DIR, count_h2d, time_interleaved
 
 DICT_CARD = 500  # 9-bit dictionary code space per string column
 
@@ -63,6 +63,7 @@ def run(n=2_000_000, num_partitions=16, out_name="BENCH_compress.json"):
     cfg = compress.CompressionConfig(plain_threshold=1000)
 
     results = {}
+    tables, queries = {}, {}
     for label, pack in (("unpacked", False), ("packed", True)):
         pt = PartitionedTable.from_arrays(
             data, cfg=cfg, num_partitions=num_partitions, pack=pack)
@@ -70,17 +71,30 @@ def run(n=2_000_000, num_partitions=16, out_name="BENCH_compress.json"):
         transferred = []
         with count_h2d(transferred):  # counted run only — timing below
             r = q.run()               # must not pay the instrumentation
-        h2d = sum(transferred)
-        ms = time_fn(lambda: _query(pt).run(), warmup=1, iters=3) * 1e3
-        results[label] = {
-            "h2d_bytes": h2d,
+        tables[label], queries[label] = pt, q
+        results[label] = {"h2d_bytes": sum(transferred),
+                          "num_groups": int(r.num_groups)}
+    # WARM timing (the paper's §9 measurement mode): the counted runs
+    # above traced and compiled the shared program, so both layouts now
+    # stream every partition through the cached jitted program — the
+    # measurement is transfer+compute+merge, not jit tracing. The two
+    # layouts are timed INTERLEAVED (same drift epochs, per-layout best)
+    # because query_speedup_packed is a CI-gated ratio of the two.
+    best = time_interleaved(
+        {label: (lambda q=q: q.run()) for label, q in queries.items()},
+        rounds=9, warmup=1)
+    for label in results:
+        pt, q, ms = tables[label], queries[label], best[label] * 1e3
+        results[label].update({
             "query_ms": round(ms, 3),
             "footprint_bytes": pt.nbytes(),
             "footprint_unpacked_bytes": pt.nbytes_unpacked(),
-            "num_groups": int(r.num_groups),
-        }
-        print(f"  {label:>9s} | H2D {h2d/2**20:8.2f} MiB | "
-              f"query {ms:8.2f} ms | footprint "
+            "pipeline": {k: q.last_stats[k] for k in
+                         ("prefetch_depth", "h2d_ms", "compute_ms",
+                          "merge_ms", "inflight_bytes_max")},
+        })
+        print(f"  {label:>9s} | H2D {results[label]['h2d_bytes']/2**20:8.2f}"
+              f" MiB | query {ms:8.2f} ms | footprint "
               f"{pt.nbytes()/2**20:7.2f} MiB")
 
     assert results["packed"]["num_groups"] == results["unpacked"]["num_groups"]

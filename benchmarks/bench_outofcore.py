@@ -49,9 +49,13 @@ def run(n=2_000_000):
                  ("budget-packed", None, budget_rows, True)] + [
             (str(k), k, None, False) for k in (4, 8, 16, 32)]
         for label, num_parts, part_rows, pack in sweep:
+            # the budget points RECORD the budget on the table, so the
+            # streamed executor clamps its prefetch ring against it
+            # (DESIGN.md §12) instead of overshooting device memory
             pt = PartitionedTable.from_arrays(
                 data, cfg=cfg, num_partitions=num_parts,
-                partition_rows=part_rows, pack=pack)
+                partition_rows=part_rows, pack=pack,
+                budget_bytes=budget if part_rows is not None else None)
             q = qfn(pt)
             h2d = []
             with count_h2d(h2d):
@@ -65,6 +69,10 @@ def run(n=2_000_000):
                 "skipped": q.last_stats["skipped"],
                 "traces": q.trace_count,
                 "ms": ms,
+                "prefetch_depth": q.last_stats["prefetch_depth"],
+                "h2d_ms": q.last_stats["h2d_ms"],
+                "compute_ms": q.last_stats["compute_ms"],
+                "merge_ms": q.last_stats["merge_ms"],
                 "h2d_MiB": sum(h2d) / 2**20,
                 "uncompressed_MiB": uncompressed / 2**20,
                 "budget_MiB": BUDGET_MIB,

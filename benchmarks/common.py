@@ -35,6 +35,31 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     return float(np.median(ts))
 
 
+def time_interleaved(fns: Dict[str, Callable], rounds: int = 5,
+                     warmup: int = 1) -> Dict[str, float]:
+    """Best wall time per labelled callable (seconds), sampled interleaved.
+
+    A/B timing comparisons (packed vs unpacked, prefetch-depth sweeps)
+    measured as sequential blocks confound the comparison with machine
+    drift — on shared-host CI runners the noise between two blocks can
+    exceed the effect under test. Each round times every callable once,
+    so all labels sample the same drift epochs, and the per-label MIN is
+    reported: scheduling noise is one-sided additive, so the minimum
+    estimates the true cost, and a ratio of minima is stable where a
+    ratio of one-shot medians flips sign run to run.
+    """
+    for fn in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+    best: Dict[str, float] = {k: float("inf") for k in fns}
+    for _ in range(rounds):
+        for label, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best[label] = min(best[label], time.perf_counter() - t0)
+    return best
+
+
 @contextlib.contextmanager
 def count_h2d(into: List[int]):
     """Count bytes crossing the partition executor's ``device_put``

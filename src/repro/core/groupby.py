@@ -393,6 +393,82 @@ class MergedGroupBy:
     num_groups: int
 
 
+def _reduce_into_groups(vals: np.ndarray, inv: np.ndarray, ng: int,
+                        agg: str) -> np.ndarray:
+    """Reduce concatenated per-group values under one combine rule."""
+    if agg in ("sum", "count"):
+        acc = np.zeros((ng,), vals.dtype)
+        np.add.at(acc, inv, vals)
+        return acc
+    if agg == "min":
+        acc = np.full((ng,), np.inf, np.float64)
+        np.minimum.at(acc, inv, vals)
+        return acc.astype(vals.dtype)
+    acc = np.full((ng,), -np.inf, np.float64)  # max
+    np.maximum.at(acc, inv, vals)
+    return acc.astype(vals.dtype)
+
+
+def fold_groupby_partial(acc, r: GroupByResult, group_names: Sequence[str],
+                         partial_specs):
+    """Fold ONE partition's GroupByResult partial into the running merged
+    state (host side) — the incremental half of ``merge_groupby_partials``
+    for the streamed executor (``core/stream.py``): partial ``i`` merges
+    here while partitions ``i+1..i+k`` transfer and compute.
+
+    ``acc`` is ``None`` or ``{"keys": uniq2d, "aggs": {out: vals},
+    "key_dtypes": [...]}`` with groups in lexicographic key order (both a
+    partition's GroupByResult slots and ``np.unique`` are lexicographic).
+    The ``np.asarray`` calls are where the host blocks on device values.
+    Folding in partition order is bit-identical to the batch merge: each
+    group's contributions accumulate left-to-right in both formulations.
+    """
+    ng = int(r.num_groups)
+    if ng == 0:
+        return acc
+    cols = [np.asarray(r.keys[g])[:ng] for g in group_names]
+    block_keys = np.stack(cols, axis=1)
+    block_aggs = {o: np.asarray(r.aggs[o])[:ng] for o, _, _ in partial_specs}
+    if acc is None:
+        return {"keys": block_keys, "aggs": block_aggs,
+                "key_dtypes": [c.dtype for c in cols]}
+    all_keys = np.concatenate([acc["keys"], block_keys], axis=0)
+    if all_keys.shape[1] == 1:
+        # np.unique(axis=0) routes through a void-dtype view + lexsort —
+        # an order of magnitude slower than the 1-D path for the common
+        # single-key group-by, and this fold sits on the streamed
+        # executor's critical path once per partition
+        u1, inv = np.unique(all_keys[:, 0], return_inverse=True)
+        uniq = u1[:, None]
+    else:
+        uniq, inv = np.unique(all_keys, axis=0, return_inverse=True)
+    ng2 = uniq.shape[0]
+    merged = {o: _reduce_into_groups(
+        np.concatenate([acc["aggs"][o], block_aggs[o]]), inv, ng2, agg)
+        for o, agg, _ in partial_specs}
+    return {"keys": uniq, "aggs": merged, "key_dtypes": acc["key_dtypes"]}
+
+
+def finalize_groupby_partials(acc, group_names: Sequence[str],
+                              specs: Sequence[Tuple[str, str, Optional[str]]]
+                              ) -> MergedGroupBy:
+    """Finalize a folded group-by state (avg = sum / count, key dtype
+    restoration); ``acc=None`` (every partition skipped or empty) yields
+    the empty result."""
+    from repro.core import plan as plan_mod
+
+    _, finalize = plan_mod.decompose_specs(specs)
+    if acc is None:
+        keys = {g: np.zeros((0,), np.int32) for g in group_names}
+        aggs = {name: np.zeros((0,), np.float32) for name, _, _ in finalize}
+        return MergedGroupBy(keys=keys, aggs=aggs, num_groups=0)
+    aggs = plan_mod._apply_finalize(acc["aggs"], finalize)
+    keys = {g: acc["keys"][:, i].astype(acc["key_dtypes"][i])
+            for i, g in enumerate(group_names)}
+    return MergedGroupBy(keys=keys, aggs=aggs,
+                         num_groups=acc["keys"].shape[0])
+
+
 def merge_groupby_partials(results: Sequence[GroupByResult],
                            group_names: Sequence[str],
                            specs: Sequence[Tuple[str, str, Optional[str]]]):
@@ -402,47 +478,14 @@ def merge_groupby_partials(results: Sequence[GroupByResult],
     non-skipped partition); ``specs`` are the ORIGINAL agg specs — the same
     decomposition applied per-partition is recomputed here so each partial
     output merges under its combine rule (sum/count add, min/max extremes)
-    and avg finalizes as merged-sum / merged-count.
+    and avg finalizes as merged-sum / merged-count. Batch wrapper over
+    ``fold_groupby_partial`` + ``finalize_groupby_partials``; the streamed
+    executor calls the incremental pair directly.
     """
     from repro.core import plan as plan_mod
 
-    partial_specs, finalize = plan_mod.decompose_specs(specs)
-    key_blocks, agg_blocks = [], {o: [] for o, _, _ in partial_specs}
-    key_dtypes = None
+    partial_specs, _ = plan_mod.decompose_specs(specs)
+    acc = None
     for r in results:
-        ng = int(r.num_groups)
-        if ng == 0:
-            continue
-        cols = [np.asarray(r.keys[g])[:ng] for g in group_names]
-        if key_dtypes is None:
-            key_dtypes = [c.dtype for c in cols]
-        key_blocks.append(np.stack(cols, axis=1))
-        for o, _, _ in partial_specs:
-            agg_blocks[o].append(np.asarray(r.aggs[o])[:ng])
-    if not key_blocks:
-        keys = {g: np.zeros((0,), np.int32) for g in group_names}
-        aggs = {name: np.zeros((0,), np.float32) for name, _, _ in finalize}
-        return MergedGroupBy(keys=keys, aggs=aggs, num_groups=0)
-
-    all_keys = np.concatenate(key_blocks, axis=0)
-    uniq, inv = np.unique(all_keys, axis=0, return_inverse=True)
-    ng = uniq.shape[0]
-    merged = {}
-    for o, agg, _ in partial_specs:
-        vals = np.concatenate(agg_blocks[o], axis=0)
-        if agg in ("sum", "count"):
-            acc = np.zeros((ng,), vals.dtype)
-            np.add.at(acc, inv, vals)
-        elif agg == "min":
-            acc = np.full((ng,), np.inf, np.float64)
-            np.minimum.at(acc, inv, vals)
-            acc = acc.astype(vals.dtype)
-        else:  # max
-            acc = np.full((ng,), -np.inf, np.float64)
-            np.maximum.at(acc, inv, vals)
-            acc = acc.astype(vals.dtype)
-        merged[o] = acc
-    aggs = plan_mod._apply_finalize(merged, finalize)
-    keys = {g: uniq[:, i].astype(key_dtypes[i])
-            for i, g in enumerate(group_names)}
-    return MergedGroupBy(keys=keys, aggs=aggs, num_groups=ng)
+        acc = fold_groupby_partial(acc, r, group_names, partial_specs)
+    return finalize_groupby_partials(acc, group_names, specs)

@@ -337,6 +337,24 @@ def host_block(res: OrderedRows, row_offset: int = 0):
     }
 
 
+def ranked_kth_bound(state, key: str, descending: bool,
+                     limit: Optional[int]):
+    """The current k-th-best primary-key bound of a merged ranked state, in
+    "larger = better" orientation, or ``None`` while fewer than ``limit``
+    candidates are held (no pruning power yet).
+
+    The bound tightens monotonically as partials merge — the invariant the
+    pipelined ranked executor's speculative prefetch relies on
+    (``stream.pipelined_ranked_fold``): a partition prunable under an older
+    bound stays prunable under every later one.
+    """
+    if (limit is None or state is None
+            or len(state["positions"]) < int(limit)):
+        return None
+    kth = state["columns"][key][-1]
+    return kth if descending else -kth
+
+
 def merge_ranked_partials(state, block, by: Sequence[str],
                           descending: Sequence[bool], limit: Optional[int]):
     """Classic distributed top-k merge: fold one partition's top-k partial

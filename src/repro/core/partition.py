@@ -11,8 +11,11 @@ single-resident-table ``plan.Query`` path lacks:
     prove a query's filters, semi-joins and PK-FK join key sets select
     nothing is never transferred to the device,
   * ``PartitionedQuery`` — streams the jitted ``Query`` program partition by
-    partition (double-buffering the host->device transfer of partition k+1
-    against compute on k) and merges decomposable aggregate partials.
+    partition through the depth-``k`` software pipeline in ``core/stream.py``
+    (transfers and device programs for partitions ``i+1..i+k`` are in flight
+    while partial ``i`` merges on the host; retired partition buffers are
+    donated back to the allocator) and folds decomposable aggregate partials
+    incrementally (DESIGN.md §12).
 
 Capacity bucketing: partition row counts and run/index capacities are rounded
 up to powers of two at ingest, so N ragged partitions share O(log
@@ -24,14 +27,24 @@ program — the mask's bounds are traced values, so raggedness never retraces.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
 
+# The streamed executor donates each partition's device buffers back to the
+# allocator (DESIGN.md §12). Small leaves — run-count scalars, int8 pad
+# vectors — can never alias a program output, and XLA warns about them at
+# every compile; donation's invalidation semantics hold regardless, so the
+# warning is pure noise here.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
+
 from repro.core import compress, groupby
 from repro.core import order as order_mod
 from repro.core import plan as plan_mod
+from repro.core import stream
 from repro.core.encodings import make_rle_mask
 from repro.core.plan import (
     And,
@@ -55,6 +68,25 @@ from repro.core.table import Table, dictionary_pass
 device_put = jax.device_put
 
 MIN_PARTITION_BUCKET = 8  # floor for padded per-partition row counts
+
+
+def _put_columns(columns):
+    """Transfer one partition's column tree, keeping 0-d metadata leaves
+    (centering / packing offsets) on the host. jit converts scalars at
+    dispatch anyway, while routing each through ``device_put`` pays a
+    per-leaf transfer round trip that, on a packed partition (one extra
+    offset leaf per packed buffer), can exceed the byte saving packing
+    bought. The bulk buffers still go through the module-global
+    ``device_put`` in ONE call per partition — the stub/count contract
+    that "a skipped partition is never transferred" rests on.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(columns)
+    bulk = [i for i, leaf in enumerate(leaves)
+            if getattr(leaf, "ndim", None) != 0]
+    dev = device_put([leaves[i] for i in bulk])
+    for i, d in zip(bulk, dev):
+        leaves[i] = d
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 @dataclasses.dataclass
@@ -103,7 +135,8 @@ class PartitionedTable:
     def __init__(self, partitions: List[Partition],
                  dictionaries: Dict[str, np.ndarray], nrows: int,
                  domains: Optional[Dict[str, tuple]] = None,
-                 col_dtypes: Optional[Dict[str, np.dtype]] = None):
+                 col_dtypes: Optional[Dict[str, np.dtype]] = None,
+                 budget_bytes: Optional[int] = None):
         self.partitions = partitions
         self.dictionaries = dictionaries
         self.nrows = nrows
@@ -115,6 +148,10 @@ class PartitionedTable:
         # ingest dtypes (post-dictionary, post-float64-narrowing): the
         # partial-merge identity elements derive from these (plan.py).
         self.col_dtypes = col_dtypes or {}
+        # device-memory budget the partitions were sized for (None =
+        # undeclared): the streamed executor clamps its prefetch ring's
+        # in-flight bytes against it (stream.clamp_depth, DESIGN.md §12).
+        self.budget_bytes = budget_bytes
 
     @classmethod
     def from_arrays(
@@ -126,14 +163,21 @@ class PartitionedTable:
         boundaries: Optional[Sequence[int]] = None,
         encodings: Optional[Dict[str, str]] = None,
         pack: Optional[bool] = None,
+        budget_bytes: Optional[int] = None,
     ) -> "PartitionedTable":
         """Ingest host arrays into row-range partitions.
 
         Exactly one of ``num_partitions`` / ``partition_rows`` /
-        ``boundaries`` selects the split; ``boundaries`` is a sorted list of
-        cut offsets strictly inside (0, nrows). Encodings are chosen (or
-        forced via ``encodings``) independently PER PARTITION — a column can
-        be RLE in a sorted region and Plain in a high-entropy one.
+        ``boundaries`` / ``budget_bytes`` selects the split; ``boundaries``
+        is a sorted list of cut offsets strictly inside (0, nrows), and
+        ``budget_bytes`` derives ``partition_rows`` via ``rows_for_budget``
+        (accounting for the dispatch policy's ``prefetch_depth`` in-flight
+        copies). ``budget_bytes`` may ALSO accompany an explicit split: it
+        is then only recorded on the table so the streamed executor can
+        clamp its prefetch ring against it (DESIGN.md §12). Encodings are
+        chosen (or forced via ``encodings``) independently PER PARTITION —
+        a column can be RLE in a sorted region and Plain in a high-entropy
+        one.
 
         ``pack=True`` (or ``cfg.pack``) bit-packs integer buffers
         (DESIGN.md §11) at the width of the GLOBAL value domains computed
@@ -155,12 +199,18 @@ class PartitionedTable:
             if dom is not None:
                 domains[name] = dom
         col_dtypes = {name: np.asarray(arr).dtype for name, arr in data.items()}
-        offsets = _partition_offsets(n, num_partitions, partition_rows,
-                                     boundaries)
         if cfg.capacity_bucket is None:
             cfg = dataclasses.replace(cfg, capacity_bucket="pow2")
         if pack is not None:
             cfg = dataclasses.replace(cfg, pack=pack)
+        if (budget_bytes is not None and num_partitions is None
+                and partition_rows is None and boundaries is None):
+            from repro.kernels import dispatch
+            partition_rows = rows_for_budget(
+                data, budget_bytes, pack=cfg.pack,
+                prefetch_depth=dispatch.policy().prefetch_depth)
+        offsets = _partition_offsets(n, num_partitions, partition_rows,
+                                     boundaries)
         parts = []
         for start, end in zip(offsets[:-1], offsets[1:]):
             rows = end - start
@@ -184,7 +234,8 @@ class PartitionedTable:
                                    row_offset=start, zone_lo=zone_lo,
                                    zone_hi=zone_hi))
         return cls(partitions=parts, dictionaries=dicts, nrows=n,
-                   domains=domains, col_dtypes=col_dtypes)
+                   domains=domains, col_dtypes=col_dtypes,
+                   budget_bytes=budget_bytes)
 
     # -- Table duck-typing for the plan layer -------------------------------
 
@@ -249,7 +300,7 @@ def _partition_offsets(n, num_partitions, partition_rows, boundaries):
 
 
 def rows_for_budget(data: Dict[str, np.ndarray], budget_bytes: int,
-                    pack: bool = False) -> int:
+                    pack: bool = False, prefetch_depth: int = 0) -> int:
     """Partition row count so each partition's UNCOMPRESSED working set fits
     ``budget_bytes`` (the out-of-core sizing rule, DESIGN.md §4).
 
@@ -259,10 +310,20 @@ def rows_for_budget(data: Dict[str, np.ndarray], budget_bytes: int,
     ``enable_pack`` kill switch (REPRO_PACK=0) is honored here exactly as
     ingest honors it — sizing by packed bits while ingest ships unpacked
     buffers would silently overrun the device budget.
+
+    ``prefetch_depth`` accounts for the streamed executor's in-flight
+    copies (DESIGN.md §12): each of the ``depth`` prefetched partitions
+    holds one more copy of the row's transfer bytes on the device, so the
+    per-row cost is ``(1 + depth)`` copies and strictly fewer rows fit.
+    The default 0 preserves the single-resident-partition sizing; the
+    executor additionally clamps its depth at run time when the table
+    records a budget, so an unaccounted depth degrades to a shallower
+    ring rather than a silent budget overshoot.
     """
     from repro.kernels import dispatch
     pack = pack and dispatch.policy().enable_pack
     max_bits = dispatch.policy().pack_max_bits
+    copies = 1 + max(int(prefetch_depth), 0)
     row_bits = 0
     for arr in data.values():
         arr = np.asarray(arr)
@@ -279,7 +340,7 @@ def rows_for_budget(data: Dict[str, np.ndarray], budget_bytes: int,
         else:
             bits = arr.dtype.itemsize * 8
         row_bits += bits
-    return max(int(budget_bytes * 8 // max(row_bits, 1)), 1)
+    return max(int(budget_bytes * 8 // max(row_bits * copies, 1)), 1)
 
 
 # ---------------------------------------------------------------------------
@@ -463,20 +524,44 @@ class PartitionedQuery(Query):
         # for benchmarking the transfer-count win (bench_orderby.py).
         self.ranked_pruning = True
 
-    def _base_mask(self, part: Partition):
-        # One-run RLE mask over the valid rows; bounds are traced values, so
-        # ragged partitions with equal buckets reuse the compiled program.
-        return make_rle_mask([0], [part.rows - 1], nrows=part.padded_rows,
-                             capacity=1)
-
     def _counted_program(self):
         inner = self.build(partial=True)
 
-        def counted(columns, key_sets, base_mask):
+        def counted(columns, key_sets, rows):
             self.trace_count += 1  # body runs only when jit (re)traces
-            return inner(columns, key_sets, base_mask)
+            # The base mask excluding padding rows is built INSIDE the
+            # program, so one fused dispatch chains base-mask, predicate,
+            # unpack and aggregate (DESIGN.md §12). ``rows`` is a traced
+            # scalar — ragged partitions sharing a capacity bucket reuse
+            # the compiled program — while the mask's ``nrows`` comes from
+            # the columns' static metadata (every encoding carries it).
+            nrows = next(iter(columns.values())).nrows
+            base = make_rle_mask([0], [rows - 1], nrows=nrows, capacity=1)
+            return inner(columns, key_sets, base)
 
         return counted
+
+    def _make_executor(self, jit: bool):
+        if not jit:
+            return self._counted_program()  # never memoized (as in Query)
+        if getattr(self, "_jitted", None) is None:
+            # donate_argnums=(0,): a retired partition's device buffers are
+            # handed back to the allocator the moment its program runs, so
+            # the prefetch ring recycles device memory instead of holding
+            # every streamed partition live until the run ends. Only the
+            # per-partition columns are donated — ``key_sets`` is reused by
+            # every invocation and must stay alive.
+            self._jitted = jax.jit(self._counted_program(),
+                                   donate_argnums=(0,))
+        return self._jitted
+
+    def _depth_and_stats(self, ptable: PartitionedTable):
+        from repro.kernels import dispatch
+
+        depth = stream.clamp_depth(dispatch.policy().prefetch_depth,
+                                   ptable.max_partition_nbytes(),
+                                   ptable.budget_bytes)
+        return depth, stream.StreamStats(prefetch_depth=depth)
 
     def run(self, jit: bool = True):
         terminal = self.terminal_op()
@@ -489,12 +574,7 @@ class PartitionedQuery(Query):
         # preparation FIRST: join prep records host_keys on each _JoinOp,
         # which partition_can_match's FK zone-map pushdown reads below
         key_sets = tuple(self._prepare_inputs())
-        if jit:
-            if getattr(self, "_jitted", None) is None:
-                self._jitted = jax.jit(self._counted_program())
-            execute = self._jitted
-        else:
-            execute = self._counted_program()  # never memoized (as in Query)
+        execute = self._make_executor(jit)
 
         ptable: PartitionedTable = self.table
         todo = [p for p in ptable.partitions
@@ -504,30 +584,47 @@ class PartitionedQuery(Query):
             "executed": len(todo),
             "skipped": len(ptable.partitions) - len(todo),
         }
+        depth, stats = self._depth_and_stats(ptable)
         if terminal is None:
             # row-terminal ranked query: distributed top-k merge with
-            # ranked zone-map pruning (sequential by design — each merge
-            # tightens the bound the NEXT skip decision needs)
-            return self._run_ranked(oop, execute, key_sets, todo)
+            # ranked zone-map pruning and speculative prefetch
+            return self._run_ranked(oop, execute, key_sets, todo, depth,
+                                    stats)
 
-        partials = []
-        # Double buffering: dispatch the device_put of partition k+1 before
-        # blocking on partition k's compute (jax dispatch is async, so the
-        # transfer overlaps compute on accelerator backends).
-        pending = device_put(todo[0].table.columns) if todo else None
-        for i, part in enumerate(todo):
-            cols = pending
-            if i + 1 < len(todo):
-                pending = device_put(todo[i + 1].table.columns)
-            partials.append(
-                execute(cols, key_sets, self._base_mask(part)))
+        def transfer(part):
+            # resolves the module-global ``device_put`` at call time inside
+            # ``_put_columns``: tests and benchmarks stub it to count
+            return _put_columns(part.table.columns)
+
+        def compute(part, cols):
+            return execute(cols, key_sets, part.rows)
 
         if isinstance(terminal, _AggOp):
-            return plan_mod.merge_scalar_partials(partials, terminal.specs,
-                                                  col_dtypes=ptable.col_dtypes)
-        merged = groupby.merge_groupby_partials(partials,
-                                                list(terminal.group),
-                                                terminal.specs)
+            partial_specs, _ = plan_mod.decompose_specs(terminal.specs)
+
+            def fold(acc, part, partial):
+                return plan_mod.fold_scalar_partial(acc, partial,
+                                                    partial_specs)
+
+            acc = stream.pipelined_fold(todo, transfer, compute, fold, None,
+                                        depth, stats,
+                                        nbytes_of=Partition.nbytes)
+            self.last_stats.update(stats.as_dict())
+            return plan_mod.finalize_scalar_partials(
+                acc, terminal.specs, col_dtypes=ptable.col_dtypes)
+
+        group_names = list(terminal.group)
+        partial_specs, _ = plan_mod.decompose_specs(terminal.specs)
+
+        def fold(acc, part, partial):
+            return groupby.fold_groupby_partial(acc, partial, group_names,
+                                                partial_specs)
+
+        acc = stream.pipelined_fold(todo, transfer, compute, fold, None,
+                                    depth, stats, nbytes_of=Partition.nbytes)
+        self.last_stats.update(stats.as_dict())
+        merged = groupby.finalize_groupby_partials(acc, group_names,
+                                                   terminal.specs)
         if oop is not None:
             # groupby + order_by: partials carry PARTIAL aggregates, so
             # ranking can only happen after the host merge finalizes them
@@ -549,7 +646,8 @@ class PartitionedQuery(Query):
                 return False
         return False
 
-    def _run_ranked(self, oop: _OrderByOp, execute, key_sets, todo):
+    def _run_ranked(self, oop: _OrderByOp, execute, key_sets, todo,
+                    depth: int, stats: stream.StreamStats):
         ptable: PartitionedTable = self.table
         key0, desc0 = oop.by[0], oop.descending[0]
         prunable = (self.ranked_pruning and oop.limit is not None
@@ -566,33 +664,52 @@ class PartitionedQuery(Query):
         # visit best-first: a good bound forms after the first partition,
         # maximizing later skips (unknown-zone partitions go first — they
         # can never be skipped, so they might as well seed the bound)
-        order = sorted(range(len(todo)), key=lambda i: (
-            0 if zone_best(todo[i]) is None else 1,
-            0 if zone_best(todo[i]) is None else -zone_best(todo[i])))
+        items = sorted(todo, key=lambda p: (
+            0 if zone_best(p) is None else 1,
+            0 if zone_best(p) is None else -zone_best(p)))
 
-        state = None
-        ranked_skipped = 0
-        executed = 0
-        for i in order:
-            part = todo[i]
-            if (prunable and state is not None
-                    and len(state["positions"]) >= oop.limit):
-                zb = zone_best(part)
-                kth = state["columns"][key0][-1]  # current k-th best
-                bound = kth if desc0 else -kth
-                # strictly-worse partitions cannot contribute (a tie could:
-                # its row might win the ascending-row-id tiebreak)
-                if zb is not None and zb < bound:
-                    ranked_skipped += 1
-                    continue
-            cols = device_put(part.table.columns)
-            executed += 1
-            res = execute(cols, key_sets, self._base_mask(part))
+        def prune(state, part):
+            """True iff the CURRENT merged bound proves ``part`` cannot
+            contribute. Strictly-worse partitions only — a tie could still
+            win the ascending-row-id tiebreak. The bound tightens
+            monotonically, so a speculatively transferred partition is
+            re-checked (and its program gated) at the ring head: the
+            executed set is EXACTLY the depth-0 sequential path's."""
+            if not prunable:
+                return False
+            bound = order_mod.ranked_kth_bound(state, key0, desc0,
+                                               oop.limit)
+            if bound is None:
+                return False
+            zb = zone_best(part)
+            return zb is not None and zb < bound
+
+        def transfer(part):
+            return _put_columns(part.table.columns)
+
+        def compute(part, cols):
+            return execute(cols, key_sets, part.rows)
+
+        def fold(state, part, res):
             block = order_mod.host_block(res, row_offset=part.row_offset)
-            state = order_mod.merge_ranked_partials(
+            return order_mod.merge_ranked_partials(
                 state, block, oop.by, oop.descending, oop.limit)
-        self.last_stats["executed"] = executed
+
+        state, ranked_skipped, wasted = stream.pipelined_ranked_fold(
+            items, transfer, compute, fold, prune, depth, stats,
+            nbytes_of=Partition.nbytes)
+        # coherent stats invariant: partitions == executed + skipped
+        # + ranked_skipped. The seed overwrote ``executed`` here while
+        # ``skipped`` kept only the zone-map count, leaving readers to
+        # reconstruct the split; ``prefetch_wasted`` counts speculative
+        # transfers whose partition the tightened bound then pruned
+        # (bytes wasted — never an execution, never a result change).
+        self.last_stats["executed"] = stats.executed
+        self.last_stats["skipped"] = (self.last_stats["partitions"]
+                                      - stats.executed - ranked_skipped)
         self.last_stats["ranked_skipped"] = ranked_skipped
+        self.last_stats["prefetch_wasted"] = wasted
+        self.last_stats.update(stats.as_dict())
         if state is None:  # every partition pruned: empty ranked result
             names = plan_mod._order_output_cols(self.ops, ptable) or ()
             state = {"positions": np.zeros((0,), np.int64),

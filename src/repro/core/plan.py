@@ -882,6 +882,39 @@ def _identity_partial(agg: str, col: Optional[str], col_dtypes):
             else np.float32(-np.inf))
 
 
+def fold_scalar_partial(acc: Optional[Dict[str, np.ndarray]],
+                        partial: Dict[str, object],
+                        partial_specs) -> Dict[str, np.ndarray]:
+    """Fold ONE partition's scalar-aggregate partial into the running
+    accumulator (host side) — the incremental half of
+    ``merge_scalar_partials``, so the streamed executor can merge partial
+    ``i`` while partitions ``i+1..i+k`` transfer and compute
+    (``core/stream.py``). ``np.asarray`` here is the point the host blocks
+    on the partition's device values.
+
+    Folding in partition order matches the batch merge bit-for-bit: each
+    combine rule accumulates left-to-right in both formulations.
+    """
+    block = {o: np.asarray(partial[o]) for o, _, _ in partial_specs}
+    if acc is None:
+        return block
+    return {o: _combine_partials(acc[o], block[o], agg)
+            for o, agg, _ in partial_specs}
+
+
+def finalize_scalar_partials(acc: Optional[Dict[str, np.ndarray]],
+                             specs: Sequence[Tuple[str, str, Optional[str]]],
+                             col_dtypes: Optional[Dict[str, np.dtype]] = None):
+    """Finalize a folded scalar accumulator: identity elements for
+    aggregates with NO surviving partition (dtype from the column's ingest
+    dtype), then the finalize rules (avg = sum / count)."""
+    partial_specs, finalize = decompose_specs(specs)
+    if acc is None:
+        acc = {o: _identity_partial(agg, c, col_dtypes)
+               for o, agg, c in partial_specs}
+    return _apply_finalize(acc, finalize)
+
+
 def merge_scalar_partials(partials: Sequence[Dict[str, object]],
                           specs: Sequence[Tuple[str, str, Optional[str]]],
                           col_dtypes: Optional[Dict[str, np.dtype]] = None):
@@ -891,20 +924,15 @@ def merge_scalar_partials(partials: Sequence[Dict[str, object]],
     _AggOp terminal; ``specs`` are the ORIGINAL (pre-decomposition) specs.
     Skipped/empty partitions simply contribute no entry; an aggregate with
     NO surviving partition gets an identity element whose dtype derives
-    from ``col_dtypes`` (the column's ingest dtype).
+    from ``col_dtypes`` (the column's ingest dtype). Batch wrapper over
+    ``fold_scalar_partial`` + ``finalize_scalar_partials`` — the streamed
+    executor calls the incremental pair directly.
     """
-    partial_specs, finalize = decompose_specs(specs)
-    merged = {}
-    for o, agg, c in partial_specs:
-        vals = [np.asarray(p[o]) for p in partials]
-        if not vals:
-            merged[o] = _identity_partial(agg, c, col_dtypes)
-            continue
-        acc = vals[0]
-        for v in vals[1:]:
-            acc = _combine_partials(acc, v, agg)
-        merged[o] = acc
-    return _apply_finalize(merged, finalize)
+    partial_specs, _ = decompose_specs(specs)
+    acc = None
+    for p in partials:
+        acc = fold_scalar_partial(acc, p, partial_specs)
+    return finalize_scalar_partials(acc, specs, col_dtypes)
 
 
 def _mask_cardinality(m):

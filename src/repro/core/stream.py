@@ -1,0 +1,287 @@
+"""Async pipelined streaming executor (DESIGN.md §12).
+
+The out-of-core path's cost is three overlappable stages per partition —
+host->device transfer, the fused device program, and the host-side partial
+merge — plus the jit dispatch glue between them. The seed executor
+double-buffered at a hard-coded depth of 1 and serialized every merge
+after the loop, so the transfer and merge stages sat on the critical path
+and bit-packing's smaller transfers could never pay for their unpack
+compute. This module turns the per-partition loop into a depth-``k``
+software pipeline:
+
+  * ``pipelined_fold`` — a prefetch ring of up to ``depth`` partitions
+    transferred ahead (on a dedicated transfer thread, so the copy
+    genuinely overlaps device execution) of the one whose partial is
+    being folded on the host, with exactly ONE device program dispatched
+    beyond the partial being drained: the next program is dispatched
+    between blocking on partial ``i`` and folding it, so the device runs
+    ``i+1`` while the host merges ``i`` and partitions ``i+2..i+k``
+    stream in. Never more than one program is enqueued ahead — on
+    backends whose executions contend for the same execution units
+    (XLA:CPU's shared intra-op pool), concurrently enqueued programs
+    slow each other down more than the overlap saves. ``depth=0`` is the
+    fully synchronous reference mode (transfer, compute, block, merge —
+    the no-overlap point the stream bench sweeps against);
+
+  * ``pipelined_ranked_fold`` — the ranked (ORDER BY / TOP-K) variant:
+    transfers are issued speculatively up to ``depth`` ahead under the
+    pruning bound known at issue time, but execution is gated by a
+    re-check at the head of the ring once earlier merges have tightened
+    the bound. Because the bound only ever tightens, the executed set is
+    EXACTLY the sequential path's — a wasted prefetch is bytes, never a
+    dispatched program and never a wrong result;
+
+  * ``clamp_depth`` — budget awareness: the ring's in-flight encoded
+    copies are clamped against the device-memory budget the table was
+    sized for (``rows_for_budget``), instead of silently overshooting it
+    by ``depth × max_partition_nbytes``.
+
+Merges fold in deterministic partition order regardless of depth, so
+results are bit-identical at every depth (tests/test_stream.py asserts
+depth 0/1/4 equality across all six encodings). Stage wall times are
+recorded per run (``StreamStats``): ``h2d_ms`` / ``compute_ms`` /
+``merge_ms`` are MAIN-thread wall time spent waiting on transfers,
+dispatching + waiting on device programs, and folding partials
+respectively — a fully hidden transfer shows up as ``h2d_ms ~ 0``, and
+under overlap the three need not sum to the elapsed wall time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Per-run pipeline observability (surfaced via ``last_stats``)."""
+
+    prefetch_depth: int = 0  # effective (post-clamp) depth this run used
+    h2d_ms: float = 0.0  # main-thread wait on transfers (hidden -> ~0)
+    compute_ms: float = 0.0  # dispatching programs + blocking on partials
+    merge_ms: float = 0.0  # folding partials on the host
+    inflight_bytes_max: int = 0  # peak bytes transferred-but-not-yet-folded
+    transferred: int = 0  # device_put calls issued
+    executed: int = 0  # device programs dispatched
+
+    def as_dict(self) -> dict:
+        return {
+            "prefetch_depth": self.prefetch_depth,
+            "h2d_ms": round(self.h2d_ms, 3),
+            "compute_ms": round(self.compute_ms, 3),
+            "merge_ms": round(self.merge_ms, 3),
+            "inflight_bytes_max": self.inflight_bytes_max,
+            "transferred": self.transferred,
+        }
+
+
+def clamp_depth(depth: int, max_part_nbytes: int,
+                budget_bytes: Optional[int]) -> int:
+    """Clamp the prefetch depth against the declared device-memory budget.
+
+    ``rows_for_budget`` sizes ONE partition's working set to the budget;
+    the prefetch ring adds up to ``depth`` encoded in-flight copies on
+    top. Those extra copies are allowed one further budget's worth of
+    memory (the seed's double-buffer already implied one undeclared copy)
+    — beyond that the depth is clamped with a warning rather than
+    silently overshooting the budget the caller asked for. Tables ingested
+    without a budget (``budget_bytes=None``) are never clamped.
+    """
+    depth = max(int(depth), 0)
+    if budget_bytes is None or max_part_nbytes <= 0 or depth <= 1:
+        return depth
+    fit = max(int(budget_bytes) // int(max_part_nbytes), 1)
+    if depth > fit:
+        warnings.warn(
+            f"prefetch_depth={depth} would keep "
+            f"{depth} x {max_part_nbytes} = {depth * max_part_nbytes} "
+            f"in-flight bytes against a {budget_bytes}-byte device budget; "
+            f"clamping to depth {fit} (REPRO_PREFETCH_DEPTH / "
+            "DispatchPolicy.prefetch_depth)", stacklevel=3)
+        return fit
+    return depth
+
+
+def _block(x) -> None:
+    jax.block_until_ready(x)
+
+
+def pipelined_fold(items: Sequence, transfer: Callable, compute: Callable,
+                   fold: Callable, init, depth: int, stats: StreamStats,
+                   nbytes_of: Optional[Callable] = None):
+    """Run ``fold(acc, item, compute(item, transfer(item)))`` over ``items``
+    as a depth-``depth`` software pipeline; returns the final ``acc``.
+
+    ``transfer(item)`` issues the (async) host->device copy;
+    ``compute(item, cols)`` dispatches the fused device program and
+    returns its (async) result; ``fold(acc, item, partial)`` consumes the
+    partial on the host — it may block on device values. Items are folded
+    strictly in sequence order at every depth, so any associative-in-order
+    merge yields bit-identical results regardless of overlap.
+
+    ``depth=0`` serializes every stage (and blocks on each partial before
+    folding) — the reference point for the overlap benchmark. With
+    ``depth >= 1``, up to ``depth`` transfers beyond the fold head are
+    in flight on a dedicated transfer thread, and exactly one device
+    program runs ahead of the partial being folded: it is dispatched
+    after blocking on partial ``i`` and before folding it, so the fold
+    and the next program overlap without ever enqueueing two programs
+    against each other (drain included — no global barrier).
+    """
+    acc = init
+    if depth <= 0:
+        for item in items:
+            t0 = time.perf_counter()
+            cols = transfer(item)
+            _block(cols)
+            t1 = time.perf_counter()
+            partial = compute(item, cols)
+            _block(partial)
+            t2 = time.perf_counter()
+            acc = fold(acc, item, partial)
+            t3 = time.perf_counter()
+            stats.h2d_ms += (t1 - t0) * 1e3
+            stats.compute_ms += (t2 - t1) * 1e3
+            stats.merge_ms += (t3 - t2) * 1e3
+            stats.transferred += 1
+            stats.executed += 1
+            if nbytes_of is not None:
+                stats.inflight_bytes_max = max(stats.inflight_bytes_max,
+                                               nbytes_of(item))
+        return acc
+
+    ring: deque = deque()  # (item, future cols): transfers in flight
+    pending = None  # (item, async partial): the ONE dispatched program
+    idx = 0
+    inflight = 0
+
+    with ThreadPoolExecutor(max_workers=1) as pool:
+
+        def top_up():
+            # the dispatched-but-unfolded program occupies a ring slot too:
+            # at most depth+1 partitions live beyond the fold head, exactly
+            # the budget clamp_depth accounts for
+            nonlocal idx, inflight
+            while (len(ring) + (pending is not None) < depth + 1
+                   and idx < len(items)):
+                item = items[idx]
+                idx += 1
+                ring.append((item, pool.submit(transfer, item)))
+                stats.transferred += 1
+                if nbytes_of is not None:
+                    inflight += nbytes_of(item)
+                    stats.inflight_bytes_max = max(stats.inflight_bytes_max,
+                                                   inflight)
+
+        def dispatch_head():
+            item, fut = ring.popleft()
+            t0 = time.perf_counter()
+            cols = fut.result()  # ~0 when the copy hid behind compute
+            t1 = time.perf_counter()
+            partial = compute(item, cols)
+            t2 = time.perf_counter()
+            stats.h2d_ms += (t1 - t0) * 1e3
+            stats.compute_ms += (t2 - t1) * 1e3
+            stats.executed += 1
+            return item, partial
+
+        top_up()
+        if ring:
+            pending = dispatch_head()
+        while pending is not None:
+            item, partial = pending
+            t0 = time.perf_counter()
+            _block(partial)  # the device is the gate
+            t1 = time.perf_counter()
+            stats.compute_ms += (t1 - t0) * 1e3
+            # program ``i`` retired: launch ``i+1`` BEFORE folding ``i``
+            # so the fold below runs under the next program, not after it
+            pending = dispatch_head() if ring else None
+            t1 = time.perf_counter()
+            acc = fold(acc, item, partial)
+            t2 = time.perf_counter()
+            stats.merge_ms += (t2 - t1) * 1e3
+            if nbytes_of is not None:
+                inflight -= nbytes_of(item)
+            # the fold head advanced: replenish the transfer ring (these
+            # copies run on the worker while the next program executes)
+            top_up()
+    return acc
+
+
+def pipelined_ranked_fold(items: Sequence, transfer: Callable,
+                          compute: Callable, fold: Callable,
+                          prune: Callable, depth: int,
+                          stats: StreamStats,
+                          nbytes_of: Optional[Callable] = None
+                          ) -> Tuple[object, int, int]:
+    """Ranked (TOP-K) pipeline: speculative prefetch, bound-gated execution.
+
+    ``items`` must arrive best-zone-first; ``prune(state, item)`` is True
+    when the CURRENT merged state's k-th-best bound proves ``item`` cannot
+    contribute. Transfers are issued up to ``depth`` ahead under the bound
+    known at issue time — the next best-zone partitions stream in while
+    the current merge tightens the bound — but each item is re-checked
+    when it reaches the head of the ring, and only then is its device
+    program dispatched. The bound tightens monotonically, so:
+
+      * an item prunable at issue time stays prunable (never transferred),
+      * an item that the strictly sequential executor would have pruned
+        is pruned at the head re-check here — speculation wastes at most
+        ``depth`` transfers' worth of BYTES, never an execution and never
+        a result (tests/test_stream.py asserts the executed set matches
+        depth 0 exactly).
+
+    Returns ``(state, ranked_skipped, prefetch_wasted)`` where
+    ``prefetch_wasted`` counts transferred-then-pruned items (a subset of
+    ``ranked_skipped``).
+    """
+    state = None
+    ring: deque = deque()  # (item, future cols) transferred, not yet gated
+    idx = 0
+    skipped = 0
+    wasted = 0
+    inflight = 0
+    with ThreadPoolExecutor(max_workers=1) as pool:
+        while idx < len(items) or ring:
+            while len(ring) < depth + 1 and idx < len(items):
+                item = items[idx]
+                idx += 1
+                if prune(state, item):
+                    skipped += 1
+                    continue
+                # speculative, off-thread: bytes at risk, not results
+                ring.append((item, pool.submit(transfer, item)))
+                stats.transferred += 1
+                if nbytes_of is not None:
+                    inflight += nbytes_of(item)
+                    stats.inflight_bytes_max = max(stats.inflight_bytes_max,
+                                                   inflight)
+            if not ring:
+                break
+            item, fut = ring.popleft()
+            if nbytes_of is not None:
+                inflight -= nbytes_of(item)
+            if prune(state, item):  # merges since issue tightened the bound
+                skipped += 1
+                wasted += 1
+                fut.cancel()  # un-started copies are dropped entirely
+                continue
+            t0 = time.perf_counter()
+            cols = fut.result()
+            t1 = time.perf_counter()
+            partial = compute(item, cols)  # gated: pruned items never run
+            _block(partial)
+            t2 = time.perf_counter()
+            state = fold(state, item, partial)
+            t3 = time.perf_counter()
+            stats.h2d_ms += (t1 - t0) * 1e3
+            stats.compute_ms += (t2 - t1) * 1e3
+            stats.merge_ms += (t3 - t2) * 1e3
+            stats.executed += 1
+    return state, skipped, wasted

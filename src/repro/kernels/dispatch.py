@@ -16,7 +16,7 @@ Policy resolution, in order:
      ``auto``, ``REPRO_SORT_FREE``, ``REPRO_SORT_FREE_MAX_DOMAIN``,
      ``REPRO_BUCKETIZE_MIN_QUERIES``, ``REPRO_RLE_DECODE_MIN_ROWS``,
      ``REPRO_SEGSUM_MAX_GROUPS``, ``REPRO_PACK``, ``REPRO_PACK_MAX_BITS``,
-     ``REPRO_UNPACK_MIN_VALS``),
+     ``REPRO_UNPACK_MIN_VALS``, ``REPRO_PREFETCH_DEPTH``),
   3. defaults: Pallas on TPU backends only (interpret mode elsewhere is a
      correctness harness, not a fast path), size thresholds below which
      the fused XLA op wins regardless of backend.
@@ -99,6 +99,13 @@ class DispatchPolicy:
     # below this many values the standalone unpack is latency-bound and
     # the inline XLA expression wins even on TPU.
     unpack_min_vals: int = 4096
+    # streamed out-of-core pipeline (core/stream.py, DESIGN.md §12): how
+    # many partitions the executor transfers (and, on the aggregate path,
+    # dispatches) AHEAD of the one whose partial is being merged. 0 = the
+    # fully synchronous reference mode, 1 = the seed's double buffering,
+    # 2 = default (hide transfer AND merge behind compute). Clamped at
+    # run time against a table's declared device-memory budget.
+    prefetch_depth: int = 2
 
     def pallas_enabled(self) -> bool:
         if self.use_pallas is not None:
@@ -156,6 +163,8 @@ def policy_from_env(env=None) -> DispatchPolicy:
         pack_max_bits=_env_int(env, "REPRO_PACK_MAX_BITS", base.pack_max_bits),
         unpack_min_vals=_env_int(env, "REPRO_UNPACK_MIN_VALS",
                                  base.unpack_min_vals),
+        prefetch_depth=_env_int(env, "REPRO_PREFETCH_DEPTH",
+                                base.prefetch_depth),
     )
 
 

@@ -32,6 +32,28 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture
+def transfer_counter(monkeypatch):
+    """Count host->device transfers by stubbing the module-global
+    ``partition.device_put`` (the streamed executor resolves it by name at
+    call time, so stubbing observes every ring transfer — including ranked
+    speculative prefetches that are later pruned without executing).
+    ``len(calls)`` is the transfer count; each entry is the HOST column
+    tree that was shipped, so tests can also assert WHICH partitions
+    transferred (identity of the leaves)."""
+    from repro.core import partition as P
+
+    calls = []
+    real = P.device_put
+
+    def counting_device_put(tree):
+        calls.append(tree)
+        return real(tree)
+
+    monkeypatch.setattr(P, "device_put", counting_device_put)
+    return calls
+
+
 # ---- host-side reference encoders (oracles build from dense arrays) --------
 
 

@@ -13,7 +13,6 @@ import pytest
 pd = pytest.importorskip("pandas")  # oracle; degrades to skip, not error
 
 from repro.core import compress
-from repro.core import partition as P
 from repro.core.groupby import MergedGroupBy
 from repro.core.partition import PartitionedQuery, PartitionedTable
 from repro.core.plan import Query, col
@@ -92,19 +91,6 @@ def assert_close(got, want, tol=1e-3):
     got, want = np.asarray(got, np.float64), np.asarray(want, np.float64)
     denom = np.maximum(np.abs(want), 1.0)
     np.testing.assert_array_less(np.abs(got - want) / denom, tol)
-
-
-@pytest.fixture
-def transfer_counter(monkeypatch):
-    calls = []
-    real = P.device_put
-
-    def counting_device_put(tree):
-        calls.append(tree)
-        return real(tree)
-
-    monkeypatch.setattr(P, "device_put", counting_device_put)
-    return calls
 
 
 # ---------------------------------------------------------------------------

@@ -14,7 +14,6 @@ import pytest
 pd = pytest.importorskip("pandas")
 
 from repro.core import compress
-from repro.core import partition as P
 from repro.core.partition import PartitionedQuery, PartitionedTable
 from repro.core.plan import Query, col
 from repro.core.table import Table
@@ -47,19 +46,6 @@ def check(res, want, cols=("k", "v")):
                                        rtol=1e-6)
         else:
             np.testing.assert_array_equal(res.columns[c], want[c].values)
-
-
-@pytest.fixture
-def transfer_counter(monkeypatch):
-    calls = []
-    real = P.device_put
-
-    def counting(tree):
-        calls.append(tree)
-        return real(tree)
-
-    monkeypatch.setattr(P, "device_put", counting)
-    return calls
 
 
 # ---------------------------------------------------------------------------
@@ -334,7 +320,13 @@ def test_partitioned_groupby_order_matches_single(rng):
 def test_ranked_pruning_skips_transfers(rng, transfer_counter):
     """The benchmark-shaped acceptance check: on a clustered order key,
     holding k rows with bound B proves partitions whose key zone map
-    cannot beat B contribute nothing — they are never device_put."""
+    cannot beat B contribute nothing — they are never device_put.
+
+    Pinned to ``prefetch_depth=0``: the strictly sequential executor's
+    contract is transfers == executed. At depth >= 1 the ranked pipeline
+    may speculatively transfer (never execute) up to ``depth`` partitions
+    the tightened bound then prunes — that contract lives in
+    tests/test_stream.py."""
     n = 40_000
     data = {"k": np.sort(rng.integers(0, 500, n)).astype(np.int32),
             "v": rng.integers(0, 1000, n).astype(np.int32)}
@@ -342,27 +334,29 @@ def test_ranked_pruning_skips_transfers(rng, transfer_counter):
     pt = PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=8)
     want = oracle(df, "k", False, 10)
 
-    q = PartitionedQuery(pt).order_by("k", descending=True, limit=10)
-    r = q.run()
-    np.testing.assert_array_equal(r.positions, want.index.values)
-    pruned_transfers = len(transfer_counter)
-    assert q.last_stats["ranked_skipped"] >= 5
-    assert pruned_transfers == q.last_stats["executed"] <= 3
+    with dispatch.overrides(prefetch_depth=0):
+        q = PartitionedQuery(pt).order_by("k", descending=True, limit=10)
+        r = q.run()
+        np.testing.assert_array_equal(r.positions, want.index.values)
+        pruned_transfers = len(transfer_counter)
+        assert q.last_stats["ranked_skipped"] >= 5
+        assert pruned_transfers == q.last_stats["executed"] <= 3
+        assert q.last_stats["prefetch_wasted"] == 0
 
-    # same query, pruning disabled: every partition transfers — the
-    # asserted transfer-count reduction
-    q2 = PartitionedQuery(pt).order_by("k", descending=True, limit=10)
-    q2.ranked_pruning = False
-    r2 = q2.run()
-    np.testing.assert_array_equal(r2.positions, r.positions)
-    assert len(transfer_counter) - pruned_transfers == 8 > pruned_transfers
+        # same query, pruning disabled: every partition transfers — the
+        # asserted transfer-count reduction
+        q2 = PartitionedQuery(pt).order_by("k", descending=True, limit=10)
+        q2.ranked_pruning = False
+        r2 = q2.run()
+        np.testing.assert_array_equal(r2.positions, r.positions)
+        assert len(transfer_counter) - pruned_transfers == 8 > pruned_transfers
 
-    # ascending ranks prune from the other end
-    q3 = PartitionedQuery(pt).order_by("k", limit=10)
-    r3 = q3.run()
-    np.testing.assert_array_equal(r3.positions,
-                                  oracle(df, "k", True, 10).index.values)
-    assert q3.last_stats["ranked_skipped"] >= 5
+        # ascending ranks prune from the other end
+        q3 = PartitionedQuery(pt).order_by("k", limit=10)
+        r3 = q3.run()
+        np.testing.assert_array_equal(r3.positions,
+                                      oracle(df, "k", True, 10).index.values)
+        assert q3.last_stats["ranked_skipped"] >= 5
 
 
 def test_ranked_pruning_ties_at_bound_still_execute(rng):

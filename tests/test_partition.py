@@ -275,19 +275,6 @@ def test_rows_for_budget():
 # ---------------------------------------------------------------------------
 
 
-@pytest.fixture
-def transfer_counter(monkeypatch):
-    calls = []
-    real = P.device_put
-
-    def counting_device_put(tree):
-        calls.append(tree)
-        return real(tree)
-
-    monkeypatch.setattr(P, "device_put", counting_device_put)
-    return calls
-
-
 def test_partition_skip_saves_transfers(rng, transfer_counter):
     n = 40_000
     data = {

@@ -1,0 +1,420 @@
+"""Async pipelined streaming executor (DESIGN.md §12, core/stream.py).
+
+Four layers:
+
+  1. pipeline harness units — ``pipelined_fold`` / ``pipelined_ranked_fold``
+     with synthetic (jax-free) callbacks: fold order, ring occupancy,
+     speculative gating, ``clamp_depth`` budget math;
+  2. depth invariance — results are BIT-IDENTICAL at prefetch depth 0/1/4
+     across all six encodings for scalar-agg, group-by and ranked
+     terminals, and equal to the single-table path;
+  3. donation safety — a retired partition's device buffers are invalidated
+     after its program runs (memory recycled), reused inputs (key sets)
+     survive, and repeated ``run()`` on the same query stays correct;
+  4. the speculative-prefetch contract — the ranked pipeline never EXECUTES
+     a partition the depth-0 sequential path would have pruned; waste is
+     bounded by the depth, in bytes only; plus the budget clamp and the
+     per-stage observability keys in ``last_stats``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import compress, stream
+from repro.core import partition as P
+from repro.core.partition import (
+    PartitionedQuery,
+    PartitionedTable,
+    rows_for_budget,
+)
+from repro.core.plan import Query, col
+from repro.core.table import Table
+from repro.kernels import dispatch
+
+CFG = compress.CompressionConfig(plain_threshold=1000)
+
+SIX_ENCODINGS = ["plain", "plain_dict", "rle", "index", "rle_index",
+                 "plain_index"]
+
+DEPTHS = (0, 1, 4)
+
+
+# ---------------------------------------------------------------------------
+# 1. pipeline harness units (synthetic callbacks, no jax values)
+# ---------------------------------------------------------------------------
+
+
+def _run_fold(items, depth, nbytes=None):
+    stats = stream.StreamStats(prefetch_depth=depth)
+    events = []
+
+    def transfer(x):
+        events.append(("put", x))
+        return x
+
+    def compute(x, cols):
+        events.append(("exec", x))
+        return cols * 10
+
+    def fold(acc, x, partial):
+        events.append(("fold", x))
+        return acc + [partial]
+
+    out = stream.pipelined_fold(items, transfer, compute, fold, [], depth,
+                                stats, nbytes_of=nbytes)
+    return out, events, stats
+
+
+@pytest.mark.parametrize("depth", [0, 1, 2, 4, 7])
+def test_pipelined_fold_order_and_counts(depth):
+    items = list(range(5))
+    out, events, stats = _run_fold(items, depth)
+    assert out == [x * 10 for x in items]  # folded strictly in order
+    assert [x for k, x in events if k == "fold"] == items
+    assert stats.transferred == stats.executed == 5
+    # ring occupancy: item x transfers only once the fold head is within
+    # ``depth`` items of it (the ring holds depth+1 in-flight partials)
+    for i, (kind, x) in enumerate(events):
+        if kind != "put":
+            continue
+        folded_before = len([1 for k, _ in events[:i] if k == "fold"])
+        assert x <= folded_before + depth
+
+
+def test_pipelined_fold_inflight_bytes_tracks_ring():
+    items = list(range(6))
+    _, _, s0 = _run_fold(items, 0, nbytes=lambda x: 100)
+    _, _, s3 = _run_fold(items, 3, nbytes=lambda x: 100)
+    assert s0.inflight_bytes_max == 100  # one resident partition
+    assert s3.inflight_bytes_max == 400  # ring holds depth+1 partitions
+
+
+def test_pipelined_fold_empty():
+    out, events, stats = _run_fold([], 2)
+    assert out == [] and events == [] and stats.transferred == 0
+
+
+@pytest.mark.parametrize("depth", [0, 1, 3])
+def test_pipelined_ranked_fold_gates_execution(depth):
+    """Items arrive best-first; the bound forms after the first fold and
+    prunes every later item — regardless of depth, exactly ONE executes
+    and speculation costs at most ``depth`` wasted transfers."""
+    items = [5, 4, 3, 2, 1]
+    executed = []
+    stats = stream.StreamStats(prefetch_depth=depth)
+
+    def prune(state, x):
+        return state is not None  # bound known after first merge
+
+    def compute(x, cols):
+        executed.append(x)
+        return x
+
+    state, skipped, wasted = stream.pipelined_ranked_fold(
+        items, lambda x: x, compute, lambda s, x, p: (s or []) + [p],
+        prune, depth, stats)
+    assert executed == [5] and state == [5]
+    assert skipped == 4  # executed set == the depth-0 sequential path's
+    assert wasted <= depth  # bytes at risk, bounded by the ring
+    assert stats.transferred == stats.executed + wasted
+
+
+def test_clamp_depth_budget_math():
+    assert stream.clamp_depth(4, 100, None) == 4  # no budget: never clamp
+    assert stream.clamp_depth(4, 100, 1000) == 4  # 4 copies fit 10 budgets
+    with pytest.warns(UserWarning, match="clamping"):
+        assert stream.clamp_depth(4, 100, 150) == 1
+    with pytest.warns(UserWarning, match="clamping"):
+        assert stream.clamp_depth(8, 100, 250) == 2
+    # depth <= 1 is the seed's implied double buffer: never clamped
+    assert stream.clamp_depth(1, 100, 50) == 1
+    assert stream.clamp_depth(0, 100, 50) == 0
+
+
+def test_prefetch_depth_env_and_budget_sizing():
+    pol = dispatch.policy_from_env({"REPRO_PREFETCH_DEPTH": "5"})
+    assert pol.prefetch_depth == 5
+    assert dispatch.policy_from_env({}).prefetch_depth == 2  # default
+    data = {"v": np.zeros(4096, np.int32), "f": np.zeros(4096, np.float32)}
+    r0 = rows_for_budget(data, 1 << 16)
+    # each in-flight copy claims one more row's transfer bytes
+    assert rows_for_budget(data, 1 << 16, prefetch_depth=1) == r0 // 2
+    assert rows_for_budget(data, 1 << 16, prefetch_depth=3) == r0 // 4
+
+
+# ---------------------------------------------------------------------------
+# 2. depth invariance: bit-identical results at depth 0/1/4, all encodings
+# ---------------------------------------------------------------------------
+
+
+def _enc_data(rng, enc, n=12_000):
+    k = np.sort(rng.integers(0, 40, n)).astype(np.int32)
+    v = rng.integers(0, 2000, n).astype(np.int32)
+    f = rng.random(n).astype(np.float32)
+    if enc == "plain_index":
+        v = np.where(rng.random(n) < 0.002, 1_500_000_000, v).astype(np.int32)
+    if enc == "plain_dict":
+        vocab = np.array([f"key_{i:03d}" for i in range(40)])
+        return {"k": vocab[k], "v": v, "f": f}, None
+    return {"k": k, "v": v, "f": f}, {"k": enc, "v": enc}
+
+
+def _terminal_results(q):
+    """(query result, comparable numpy payload) for any of the three
+    terminal shapes."""
+    r = q.run()
+    if hasattr(r, "num_groups"):  # MergedGroupBy
+        ng = int(r.num_groups)
+        return {**{f"k:{g}": np.asarray(r.keys[g])[:ng] for g in r.keys},
+                **{f"a:{o}": np.asarray(r.aggs[o])[:ng] for o in r.aggs}}
+    if hasattr(r, "positions"):  # RankedTable
+        return {"pos": np.asarray(r.positions),
+                **{f"c:{n}": np.asarray(r.columns[n]) for n in r.columns}}
+    return {o: np.asarray(r[o]) for o in r}  # scalar aggregate dict
+
+
+@pytest.mark.parametrize("enc", SIX_ENCODINGS)
+def test_depth_invariance_all_encodings(rng, enc):
+    data, encs = _enc_data(rng, enc)
+    kf = "key_010" if enc == "plain_dict" else 10
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=5,
+                                      encodings=encs, pack=True)
+    t = Table.from_arrays(data, cfg=CFG, encodings=encs, pack=True)
+
+    def queries(mk):
+        # one FRESH query per terminal — staging mutates the query object
+        yield (mk().filter((col("k") == kf) | (col("v") > 500))
+               .aggregate({"s": ("sum", "v"), "a": ("avg", "f"),
+                           "m": ("min", "v"), "c": ("count", None)}))
+        yield (mk().filter(col("v") <= 1800)
+               .groupby(["k"], {"s": ("sum", "v"), "a": ("avg", "f")},
+                        num_groups_cap=64))
+        yield (mk().filter(col("v") > 100)
+               .order_by("v", descending=True, limit=9, cols=["k"]))
+
+    single = [_terminal_results(q) for q in queries(lambda: Query(t))]
+    base = None  # depth-0 partitioned reference
+    for depth in DEPTHS:
+        with dispatch.overrides(prefetch_depth=depth):
+            got = [_terminal_results(q)
+                   for q in queries(lambda: PartitionedQuery(pt))]
+        if base is None:
+            base = got
+            # partitioned == single-table: exact for integer/key/position
+            # payloads; float aggregates to float32 resolution (the host
+            # merge finalizes avg in float64, the device in float32)
+            for g, s in zip(got, single):
+                assert g.keys() == s.keys()
+                for name in g:
+                    if (np.asarray(g[name]).dtype.kind == "f"
+                            or np.asarray(s[name]).dtype.kind == "f"):
+                        # float32 partial sums accumulate per partition:
+                        # single vs partitioned differ at rounding order
+                        # (the repo-wide 1e-4 oracle tolerance)
+                        np.testing.assert_allclose(
+                            g[name], s[name], rtol=1e-4,
+                            err_msg=f"{enc} single field={name}")
+                    else:
+                        np.testing.assert_array_equal(
+                            g[name], s[name],
+                            err_msg=f"{enc} single field={name}")
+            continue
+        for g, b in zip(got, base):  # identical fold order => bit-identical
+            assert g.keys() == b.keys()
+            for name in g:
+                np.testing.assert_array_equal(g[name], b[name], err_msg=(
+                    f"{enc} depth={depth} field={name}"))
+
+
+def test_depth_invariance_join_pipeline(rng):
+    """The dimension-join key sets are NOT donated — every partition's
+    program reuses them, at any depth."""
+    n = 8_000
+    fact = {"fk": rng.integers(0, 50, n).astype(np.int32),
+            "v": rng.integers(0, 1000, n).astype(np.int32)}
+    dim = {"id": np.arange(50, dtype=np.int32),
+           "seg": (np.arange(50, dtype=np.int32) % 4)}
+    dt = Table.from_arrays(dim, cfg=CFG)
+
+    def result(depth):
+        pt = PartitionedTable.from_arrays(fact, cfg=CFG, num_partitions=6)
+        with dispatch.overrides(prefetch_depth=depth):
+            q = (PartitionedQuery(pt)
+                 .join(dt, fk="fk", cols=["seg"], on="id")
+                 .groupby(["seg"], {"s": ("sum", "v")}, num_groups_cap=8))
+            return _terminal_results(q)
+
+    base = result(0)
+    for depth in (1, 4):
+        got = result(depth)
+        for name in base:
+            np.testing.assert_array_equal(got[name], base[name])
+
+
+# ---------------------------------------------------------------------------
+# 3. donation safety
+# ---------------------------------------------------------------------------
+
+
+def test_donation_invalidates_retired_partitions(rng, monkeypatch):
+    """Donation is live on the streamed path: after the run, retired
+    partitions' transferred device buffers include INVALIDATED (donated)
+    leaves, the executor itself never touches a donated buffer again
+    (results are correct), and running the SAME cached jitted program
+    again still works — no use-after-donate. Leaves XLA cannot alias to
+    an output stay alive (backend-dependent) and are reclaimed by
+    refcount instead; invalidation of the rest is what proves
+    donate_argnums reached the executable.
+
+    The float32 measure buffer is sized to the group cap (16 rows per
+    partition, cap 16) so its shape/dtype matches the sum-partial output
+    buffer exactly — the case XLA CPU demonstrably aliases. Scalar
+    metadata leaves never reach ``device_put`` (``_put_columns`` keeps
+    them host-side), so aliasing a BULK buffer is the whole signal."""
+    n = 96
+    data = {"k": np.array([f"g{i % 13:02d}" for i in range(n)]),
+            "v": (rng.random(n) * 100).astype(np.float32)}
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, partition_rows=16)
+    device_trees = []
+    real = P.device_put
+
+    def recording(tree):
+        out = real(tree)
+        device_trees.append(out)
+        return out
+
+    monkeypatch.setattr(P, "device_put", recording)
+    q = (PartitionedQuery(pt).filter(col("v") < 90)
+         .groupby(["k"], {"s": ("sum", "v")}, num_groups_cap=16))
+    r1 = q.run()
+    assert len(device_trees) == q.last_stats["executed"] == 6
+    for tree in device_trees:
+        leaves = [x for x in jax.tree_util.tree_leaves(tree)
+                  if isinstance(x, jax.Array)]
+        assert leaves and any(x.is_deleted() for x in leaves)
+
+    r2 = q.run()  # re-run: the cached jitted program is donation-safe
+    ng = int(r1.num_groups)
+    assert int(r2.num_groups) == ng
+    np.testing.assert_array_equal(np.asarray(r1.aggs["s"])[:ng],
+                                  np.asarray(r2.aggs["s"])[:ng])
+    df_k = data["k"][data["v"] < 90]
+    df_v = data["v"][data["v"] < 90]
+    want = np.array([df_v[df_k == g].sum() for g in np.unique(df_k)])
+    np.testing.assert_allclose(np.asarray(r1.aggs["s"])[:ng], want,
+                               rtol=1e-4)
+
+
+def test_unjitted_run_matches_jitted(rng):
+    """run(jit=False) takes the no-donation eager path; same results."""
+    data = {"k": rng.integers(0, 8, 4_000).astype(np.int32),
+            "v": rng.integers(0, 100, 4_000).astype(np.int32)}
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=4)
+
+    def q():
+        return (PartitionedQuery(pt)
+                .aggregate({"s": ("sum", "v"), "c": ("count", None)}))
+
+    a, b = q().run(jit=True), q().run(jit=False)
+    assert int(a["s"]) == int(b["s"]) and int(a["c"]) == int(b["c"])
+
+
+# ---------------------------------------------------------------------------
+# 4. speculative prefetch contract, budget clamp, observability
+# ---------------------------------------------------------------------------
+
+
+def _ranked_setup(rng):
+    n = 40_000
+    data = {"k": np.sort(rng.integers(0, 500, n)).astype(np.int32),
+            "v": rng.integers(0, 1000, n).astype(np.int32)}
+    return PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=8)
+
+
+def test_ranked_speculation_never_executes_pruned(rng, transfer_counter):
+    """The tentpole ranked contract: speculative prefetch may WASTE up to
+    ``depth`` transfers (bytes), but the executed set — and therefore the
+    result — is exactly the depth-0 sequential path's."""
+    pt = _ranked_setup(rng)
+
+    def run(depth):
+        with dispatch.overrides(prefetch_depth=depth):
+            q = PartitionedQuery(pt).order_by("k", descending=True, limit=10)
+            r = q.run()
+        return r, dict(q.last_stats)
+
+    r0, s0 = run(0)
+    n0 = len(transfer_counter)
+    assert s0["transferred"] == s0["executed"] == n0
+    assert s0["prefetch_wasted"] == 0
+
+    for depth in (2, 4):
+        r, s = run(depth)
+        np.testing.assert_array_equal(r.positions, r0.positions)
+        assert s["executed"] == s0["executed"]  # never executes a pruned one
+        assert s["prefetch_wasted"] <= depth  # waste bounded by the ring
+        assert s["transferred"] == s["executed"] + s["prefetch_wasted"]
+        # stats partition the table: zone + ranked skips + executed
+        assert (s["executed"] + s["skipped"] + s["ranked_skipped"]
+                == s["partitions"])
+
+
+def test_budget_clamps_runtime_depth(rng):
+    """A table ingested under a device budget clamps the ring so in-flight
+    copies cannot overshoot what ``rows_for_budget`` sized for."""
+    data = {"k": rng.integers(0, 10, 20_000).astype(np.int32),
+            "v": rng.integers(0, 100, 20_000).astype(np.int32)}
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=8,
+                                      budget_bytes=pt_budget(data))
+    q = PartitionedQuery(pt).aggregate({"s": ("sum", "v")})
+    with dispatch.overrides(prefetch_depth=6):
+        with pytest.warns(UserWarning, match="clamping"):
+            q.run()
+    assert q.last_stats["prefetch_depth"] < 6
+    assert (q.last_stats["inflight_bytes_max"]
+            <= (q.last_stats["prefetch_depth"] + 1)
+            * pt.max_partition_nbytes())
+
+
+def pt_budget(data):
+    """A budget of ~2 partitions' worth for the 8-partition split above."""
+    nbytes = sum(np.asarray(a).nbytes for a in data.values())
+    return nbytes // 4
+
+
+def test_budget_bytes_derives_partition_rows(rng):
+    """budget_bytes alone sizes partitions via rows_for_budget, accounting
+    for the policy's prefetch depth (more in-flight copies => more, smaller
+    partitions)."""
+    data = {"v": rng.integers(0, 100, 50_000).astype(np.int32),
+            "f": rng.random(50_000).astype(np.float32)}
+    with dispatch.overrides(prefetch_depth=0):
+        p0 = PartitionedTable.from_arrays(data, cfg=CFG,
+                                          budget_bytes=1 << 16)
+    with dispatch.overrides(prefetch_depth=3):
+        p3 = PartitionedTable.from_arrays(data, cfg=CFG,
+                                          budget_bytes=1 << 16)
+    assert len(p3.partitions) >= 4 * len(p0.partitions) - 4
+    assert p0.budget_bytes == p3.budget_bytes == 1 << 16
+    q = PartitionedQuery(p0).aggregate({"s": ("sum", "v")})
+    got = q.run()
+    assert int(got["s"]) == int(np.sum(data["v"], dtype=np.int64))
+
+
+def test_last_stats_observability_keys(rng):
+    data = {"k": rng.integers(0, 10, 9_000).astype(np.int32),
+            "v": rng.integers(0, 100, 9_000).astype(np.int32)}
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=5)
+    q = (PartitionedQuery(pt)
+         .groupby(["k"], {"s": ("sum", "v")}, num_groups_cap=16))
+    q.run()
+    s = q.last_stats
+    for key in ("h2d_ms", "compute_ms", "merge_ms", "prefetch_depth",
+                "inflight_bytes_max", "transferred", "partitions",
+                "executed", "skipped"):
+        assert key in s, key
+    assert s["prefetch_depth"] == dispatch.policy().prefetch_depth
+    assert s["h2d_ms"] >= 0 and s["compute_ms"] > 0 and s["merge_ms"] > 0
+    assert s["transferred"] == s["executed"] == 5
+    assert 0 < s["inflight_bytes_max"] <= (
+        (s["prefetch_depth"] + 1) * pt.max_partition_nbytes())
