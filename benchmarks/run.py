@@ -22,14 +22,15 @@ def main(argv=None):
                             bench_compression_quality, bench_groupby,
                             bench_memory, bench_orderby, bench_outofcore,
                             bench_primitives, bench_production,
-                            bench_roofline, bench_skew, bench_stream,
-                            bench_tpch)
+                            bench_roofline, bench_serving, bench_skew,
+                            bench_stream, bench_tpch)
 
     benches = {
         "groupby": lambda: bench_groupby.run(n=300_000 if q else 10_000_000),
         "orderby": lambda: bench_orderby.run(n=300_000 if q else 10_000_000),
         "compress": lambda: bench_compress.run(n=300_000 if q else 2_000_000),
         "stream": lambda: bench_stream.run(n=300_000 if q else 2_000_000),
+        "serving": lambda: bench_serving.run(n=300_000 if q else 2_000_000),
         "primitives": lambda: bench_primitives.run(
             sizes=(10_000, 100_000, 500_000) if q else
             (10_000, 100_000, 1_000_000, 4_000_000)),

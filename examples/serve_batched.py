@@ -1,4 +1,5 @@
-"""Batched serving: prefill + greedy decode with KV/SSM-state caches.
+"""Batched LLM serving: prefill + greedy decode with KV/SSM-state caches.
+(SQL query serving is examples/serving_demo.py — repro.core.serve.)
 
     PYTHONPATH=src python examples/serve_batched.py --arch qwen2_1p5b
     PYTHONPATH=src python examples/serve_batched.py --arch zamba2_1p2b
@@ -9,7 +10,7 @@ demonstrate O(1)-state decode (the long_500k enabler).
 """
 import sys
 
-from repro.launch.serve import main as serve_main
+from repro.launch.serve_model import main as serve_main
 
 
 if __name__ == "__main__":

@@ -12,6 +12,8 @@ Layers:
   table, plan — Table container + jitted query pipelines (App. D rules)
   partition   — partitioned out-of-core execution: zone maps + partial merge
   order       — ORDER BY / TOP-K / LIMIT + distributed top-k merge (§10)
+  serve       — concurrent query serving: plan cache, device-residency LRU,
+                shared scans, admission queue (DESIGN.md §13)
 """
 from repro.core import (
     arithmetic,
@@ -23,6 +25,7 @@ from repro.core import (
     partition,
     plan,
     primitives,
+    serve,
 )
 from repro.core.encodings import (
     IndexColumn,
@@ -46,4 +49,5 @@ from repro.core.encodings import (
 from repro.core.order import RankedTable
 from repro.core.partition import PartitionedQuery, PartitionedTable
 from repro.core.plan import Query, col
+from repro.core.serve import QueryServer
 from repro.core.table import Table

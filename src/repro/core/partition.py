@@ -499,6 +499,30 @@ def partition_can_match(part: Partition, ops, table: PartitionedTable) -> bool:
 # ---------------------------------------------------------------------------
 
 
+def base_masked_program(inner, on_trace=None):
+    """Wrap a partial-mode ``Query.build`` program into the partitioned
+    calling convention ``(columns, key_sets, rows)``.
+
+    The base mask excluding padding rows is built INSIDE the program, so
+    one fused dispatch chains base-mask, predicate, unpack and aggregate
+    (DESIGN.md §12). ``rows`` is a traced scalar — ragged partitions
+    sharing a capacity bucket reuse the compiled program — while the
+    mask's ``nrows`` comes from the columns' static metadata (every
+    encoding carries it). ``on_trace`` fires only when jit (re)traces the
+    wrapper — the retrace observability hook both ``PartitionedQuery``
+    and the serving layer's plan cache (core/serve.py) hang counters on.
+    """
+
+    def wrapped(columns, key_sets, rows):
+        if on_trace is not None:
+            on_trace()  # body runs only when jit (re)traces
+        nrows = next(iter(columns.values())).nrows
+        base = make_rle_mask([0], [rows - 1], nrows=nrows, capacity=1)
+        return inner(columns, key_sets, base)
+
+    return wrapped
+
+
 class PartitionedQuery(Query):
     """A ``Query`` over a ``PartitionedTable``: same staging API (including
     ``join`` against host-resident dimension tables — the dimension side is
@@ -523,25 +547,30 @@ class PartitionedQuery(Query):
         # the current k-th best are never transferred. Off switch exists
         # for benchmarking the transfer-count win (bench_orderby.py).
         self.ranked_pruning = True
+        # serving hooks (core/serve.py, DESIGN.md §13): the server swaps in
+        # a residency-LRU transfer (hot partitions skip device_put) and a
+        # cached NON-donating program (resident buffers must survive the
+        # invocation, unlike the streamed donate-and-retire default).
+        self._transfer_fn = None
+        self._program_override = None
 
     def _counted_program(self):
-        inner = self.build(partial=True)
+        def bump():
+            self.trace_count += 1
 
-        def counted(columns, key_sets, rows):
-            self.trace_count += 1  # body runs only when jit (re)traces
-            # The base mask excluding padding rows is built INSIDE the
-            # program, so one fused dispatch chains base-mask, predicate,
-            # unpack and aggregate (DESIGN.md §12). ``rows`` is a traced
-            # scalar — ragged partitions sharing a capacity bucket reuse
-            # the compiled program — while the mask's ``nrows`` comes from
-            # the columns' static metadata (every encoding carries it).
-            nrows = next(iter(columns.values())).nrows
-            base = make_rle_mask([0], [rows - 1], nrows=nrows, capacity=1)
-            return inner(columns, key_sets, base)
+        return base_masked_program(self.build(partial=True), on_trace=bump)
 
-        return counted
+    def _transfer(self, part: Partition):
+        # resolves the module-global ``device_put`` at call time inside
+        # ``_put_columns``: tests and benchmarks stub it to count; the
+        # serving layer injects its residency LRU here instead
+        if self._transfer_fn is not None:
+            return self._transfer_fn(part)
+        return _put_columns(part.table.columns)
 
     def _make_executor(self, jit: bool):
+        if self._program_override is not None:
+            return self._program_override
         if not jit:
             return self._counted_program()  # never memoized (as in Query)
         if getattr(self, "_jitted", None) is None:
@@ -591,10 +620,7 @@ class PartitionedQuery(Query):
             return self._run_ranked(oop, execute, key_sets, todo, depth,
                                     stats)
 
-        def transfer(part):
-            # resolves the module-global ``device_put`` at call time inside
-            # ``_put_columns``: tests and benchmarks stub it to count
-            return _put_columns(part.table.columns)
+        transfer = self._transfer
 
         def compute(part, cols):
             return execute(cols, key_sets, part.rows)
@@ -684,8 +710,7 @@ class PartitionedQuery(Query):
             zb = zone_best(part)
             return zb is not None and zb < bound
 
-        def transfer(part):
-            return _put_columns(part.table.columns)
+        transfer = self._transfer
 
         def compute(part, cols):
             return execute(cols, key_sets, part.rows)

@@ -273,6 +273,69 @@ class _OrderByOp:
     cols: Optional[Tuple[str, ...]] = None
 
 
+def _expr_signature(expr):
+    """Hashable description of a predicate tree, literals included."""
+    if expr is None:
+        return None
+    if isinstance(expr, Pred):
+        lit = expr.literal
+        if isinstance(lit, (list, np.ndarray)):  # isin literal sets
+            lit = tuple(np.asarray(lit).tolist())
+        return ("pred", expr.col, expr.op, lit)
+    if isinstance(expr, RangePred):
+        return ("range", expr.col, expr.lo, expr.hi, expr.lo_incl,
+                expr.hi_incl)
+    if isinstance(expr, And):
+        return ("and", _expr_signature(expr.a), _expr_signature(expr.b))
+    if isinstance(expr, Or):
+        return ("or", _expr_signature(expr.a), _expr_signature(expr.b))
+    if isinstance(expr, Not):
+        return ("not", _expr_signature(expr.a))
+    raise TypeError(f"unknown predicate node {type(expr).__name__}")
+
+
+def plan_signature(ops) -> tuple:
+    """Hashable key under which two staged pipelines share one traced
+    program (the serving layer's plan cache, core/serve.py, DESIGN.md §13).
+
+    Filter literals are BAKED into the trace as constants
+    (``eval_predicate`` closes over Python scalars), so the signature must
+    carry literal VALUES, not just op shapes — two point queries differing
+    only in the literal are different programs. Semi-join / PK-FK key sets
+    are traced ARGUMENTS (pow2-padded, so their shapes bucket), but their
+    contents steer zone-map pruning and therefore which capacity buckets
+    execute; hashing the bytes keeps a cache hit's warm-trace guarantee
+    unconditional. ``map`` callables and dimension tables key by identity —
+    resubmitting the same Python objects hits, structurally equal clones
+    conservatively miss.
+    """
+    sig = []
+    for op in ops:
+        if isinstance(op, _FilterOp):
+            sig.append(("filter", _expr_signature(op.expr)))
+        elif isinstance(op, _SemiJoinOp):
+            keys = np.asarray(op.keys)
+            sig.append(("semi_join", op.on, str(keys.dtype), keys.shape,
+                        hash(keys.tobytes())))
+        elif isinstance(op, _JoinOp):
+            sig.append(("join", op.fk, op.on, tuple(op.cols), tuple(op.out),
+                        id(op.dim), _expr_signature(op.where)))
+        elif isinstance(op, _MapOp):
+            sig.append(("map", op.out, id(op.fn)))
+        elif isinstance(op, _GroupByOp):
+            sig.append(("groupby", tuple(op.group), tuple(op.specs),
+                        op.num_groups_cap))
+        elif isinstance(op, _AggOp):
+            sig.append(("agg", tuple(op.specs)))
+        elif isinstance(op, _OrderByOp):
+            sig.append(("order_by", tuple(op.by), tuple(op.descending),
+                        op.limit,
+                        tuple(op.cols) if op.cols is not None else None))
+        else:
+            raise TypeError(f"unknown op {type(op).__name__}")
+    return tuple(sig)
+
+
 class _SchemaView:
     """Layered name resolution over a staged pipeline.
 

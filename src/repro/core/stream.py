@@ -68,6 +68,15 @@ class StreamStats:
     inflight_bytes_max: int = 0  # peak bytes transferred-but-not-yet-folded
     transferred: int = 0  # device_put calls issued
     executed: int = 0  # device programs dispatched
+    # serving attribution (core/serve.py, DESIGN.md §13). On a served run
+    # these split where a query's partitions came from: ``lru_hits`` were
+    # already device-resident (no device_put at all), ``shared_hits`` were
+    # transferred by a co-batched query in the same shared pass, and
+    # ``transferred`` narrows to the copies THIS query triggered — so
+    # summing ``transferred`` across a batch matches the pass's actual
+    # device_put count. Standalone PartitionedQuery runs leave both at 0.
+    lru_hits: int = 0
+    shared_hits: int = 0
 
     def as_dict(self) -> dict:
         return {
@@ -77,6 +86,8 @@ class StreamStats:
             "merge_ms": round(self.merge_ms, 3),
             "inflight_bytes_max": self.inflight_bytes_max,
             "transferred": self.transferred,
+            "lru_hits": self.lru_hits,
+            "shared_hits": self.shared_hits,
         }
 
 

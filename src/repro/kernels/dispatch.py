@@ -16,7 +16,9 @@ Policy resolution, in order:
      ``auto``, ``REPRO_SORT_FREE``, ``REPRO_SORT_FREE_MAX_DOMAIN``,
      ``REPRO_BUCKETIZE_MIN_QUERIES``, ``REPRO_RLE_DECODE_MIN_ROWS``,
      ``REPRO_SEGSUM_MAX_GROUPS``, ``REPRO_PACK``, ``REPRO_PACK_MAX_BITS``,
-     ``REPRO_UNPACK_MIN_VALS``, ``REPRO_PREFETCH_DEPTH``),
+     ``REPRO_UNPACK_MIN_VALS``, ``REPRO_PREFETCH_DEPTH``,
+     ``REPRO_SERVE_BUDGET_BYTES``, ``REPRO_PLAN_CACHE_SIZE``,
+     ``REPRO_SERVE_MAX_BATCH`` — docs/KNOBS.md is the canonical table),
   3. defaults: Pallas on TPU backends only (interpret mode elsewhere is a
      correctness harness, not a fast path), size thresholds below which
      the fused XLA op wins regardless of backend.
@@ -106,6 +108,14 @@ class DispatchPolicy:
     # 2 = default (hide transfer AND merge behind compute). Clamped at
     # run time against a table's declared device-memory budget.
     prefetch_depth: int = 2
+    # query-serving layer (core/serve.py, DESIGN.md §13): device-residency
+    # LRU byte budget (None = the served table's declared budget, falling
+    # back to unbounded), jitted-plan cache capacity (distinct query
+    # shapes held warm), and the admission loop's shared-scan batch bound
+    # (how many compatible queued queries one streamed pass may serve).
+    serve_budget_bytes: Optional[int] = None
+    plan_cache_size: int = 32
+    serve_max_batch: int = 8
 
     def pallas_enabled(self) -> bool:
         if self.use_pallas is not None:
@@ -130,6 +140,13 @@ def _env_tristate(env, name: str) -> Optional[bool]:
 def _env_int(env, name: str, default: int) -> int:
     raw = env.get(name)
     if raw is None:
+        return default
+    return int(raw)
+
+
+def _env_opt_int(env, name: str, default: Optional[int]) -> Optional[int]:
+    raw = env.get(name)
+    if raw is None or raw.strip().lower() in ("", "none", "auto"):
         return default
     return int(raw)
 
@@ -165,6 +182,12 @@ def policy_from_env(env=None) -> DispatchPolicy:
                                  base.unpack_min_vals),
         prefetch_depth=_env_int(env, "REPRO_PREFETCH_DEPTH",
                                 base.prefetch_depth),
+        serve_budget_bytes=_env_opt_int(env, "REPRO_SERVE_BUDGET_BYTES",
+                                        base.serve_budget_bytes),
+        plan_cache_size=_env_int(env, "REPRO_PLAN_CACHE_SIZE",
+                                 base.plan_cache_size),
+        serve_max_batch=_env_int(env, "REPRO_SERVE_MAX_BATCH",
+                                 base.serve_max_batch),
     )
 
 

@@ -1,82 +1,12 @@
-"""Batched serving driver: prefill + decode loop with a KV/SSM-state cache.
-
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2_1p5b --smoke \\
-        --batch 4 --prompt-len 32 --gen 16
-
-Exercises the serve path end-to-end: batched prompts -> (token-by-token)
-prefill into the cache -> greedy decode. On TPU the same two jitted programs
-run under the production mesh with the dryrun's shardings.
+"""Back-compat alias: the batched LLM prefill/decode driver moved to
+``repro.launch.serve_model`` (this name used to collide with the SQL
+query-serving layer, ``repro.core.serve`` — DESIGN.md §13). The CLI entry
+``python -m repro.launch.serve`` keeps working through this shim; new
+code should import / invoke ``repro.launch.serve_model`` directly.
 """
-from __future__ import annotations
+from repro.launch.serve_model import main
 
-import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import configs
-from repro.models import model as M
-
-
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list(configs.ARCHS))
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    cfg = (configs.get_smoke_config(args.arch) if args.smoke
-           else configs.get_config(args.arch))
-    rng = np.random.default_rng(args.seed)
-    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
-    B, P, G = args.batch, args.prompt_len, args.gen
-    max_seq = P + G
-
-    decode = jax.jit(lambda p, c, b, pos: M.decode_step(p, cfg, c, b, pos),
-                     donate_argnums=(1,))
-    cache = M.init_cache(cfg, B, max_seq)
-
-    if cfg.family == "audio":
-        mk = lambda tok: {"embeds": jnp.asarray(
-            rng.standard_normal((B, 1, cfg.d_model)), cfg.dtype)}
-        prompt = np.zeros((B, P), np.int32)
-    else:
-        prompt = rng.integers(0, cfg.vocab_size, (B, P)).astype(np.int32)
-        mk = lambda tok: {"tokens": jnp.asarray(tok[:, None], jnp.int32)}
-
-    # prefill: feed prompt tokens through the decode path to fill the cache
-    t0 = time.perf_counter()
-    logits = None
-    for i in range(P):
-        logits, cache = decode(params, cache, mk(prompt[:, i]),
-                               jnp.asarray(i, jnp.int32))
-    t_prefill = time.perf_counter() - t0
-
-    # greedy decode
-    outs = []
-    t1 = time.perf_counter()
-    for i in range(G):
-        nxt = jnp.argmax(logits[:, -1].reshape(B, -1), axis=-1).astype(jnp.int32)
-        outs.append(np.asarray(nxt))
-        logits, cache = decode(params, cache, mk(np.asarray(nxt)),
-                               jnp.asarray(P + i, jnp.int32))
-    t_decode = time.perf_counter() - t1
-
-    gen = np.stack(outs, axis=1)
-    print(f"arch={cfg.name} family={cfg.family}")
-    print(f"prefill {P} tokens x {B} seqs: {t_prefill:.2f}s "
-          f"({B * P / max(t_prefill, 1e-9):.0f} tok/s)")
-    print(f"decode  {G} tokens x {B} seqs: {t_decode:.2f}s "
-          f"({B * G / max(t_decode, 1e-9):.0f} tok/s)")
-    print(f"generated ids (first seq): {gen[0][:16].tolist()}")
-    assert not np.isnan(np.asarray(logits, np.float32)).any()
-    return gen
-
+__all__ = ["main"]
 
 if __name__ == "__main__":
     main()

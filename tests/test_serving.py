@@ -1,0 +1,374 @@
+"""Concurrent query-serving layer (DESIGN.md §13, core/serve.py).
+
+Five layers:
+
+  1. correctness under concurrency — N submitter threads firing a mixed
+     workload (scalar agg / group-by / ranked / group-by+order-by) get
+     results BIT-IDENTICAL to solo ``PartitionedQuery.run()`` execution;
+  2. shared scans — co-batched compatible queries ride ONE streamed pass
+     and still equal per-query execution across all six encodings, with
+     per-query ``StreamStats`` attribution (who paid the transfer, who
+     rode an LRU hit, who rode a co-query's copy);
+  3. the device-residency LRU — a second query over a hot partition does
+     ZERO ``device_put`` (transfer-count stub), eviction respects the
+     byte budget and never corrupts results;
+  4. the plan cache — a hit is retrace-free (trace counter flat across
+     the second submission), capacity bounds the entry count;
+  5. admission/queue plumbing — budget-bounded batch formation, serving
+     stats keys, env knobs, submit-time validation.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import compress, serve
+from repro.core.partition import PartitionedQuery, PartitionedTable
+from repro.core.plan import col, plan_signature
+from repro.core.serve import DeviceResidencyLRU, QueryServer
+from repro.core.table import Table
+from repro.kernels import dispatch
+
+CFG = compress.CompressionConfig(plain_threshold=1000)
+
+SIX_ENCODINGS = ["plain", "plain_dict", "rle", "index", "rle_index",
+                 "plain_index"]
+
+
+def _mixed_table(rng, n=18_000, parts=6, **kw):
+    data = {
+        "k": np.sort(rng.integers(0, 40, n)).astype(np.int32),
+        "v": rng.integers(0, 2000, n).astype(np.int32),
+        "f": rng.random(n).astype(np.float32),
+    }
+    return PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=parts,
+                                        **kw)
+
+
+# the four terminal shapes a serving mix exercises; each maker returns a
+# FRESH query (staging mutates the query object)
+def _mk_agg(pt):
+    return (PartitionedQuery(pt).filter(col("v") > 500)
+            .aggregate({"s": ("sum", "v"), "a": ("avg", "f"),
+                        "c": ("count", None)}))
+
+
+def _mk_groupby(pt):
+    return (PartitionedQuery(pt).filter(col("v") <= 1800)
+            .groupby(["k"], {"s": ("sum", "v"), "a": ("avg", "f")},
+                     num_groups_cap=64))
+
+
+def _mk_ranked(pt):
+    return (PartitionedQuery(pt).filter(col("v") > 100)
+            .order_by("v", descending=True, limit=9, cols=["k"]))
+
+
+def _mk_groupby_ranked(pt):
+    return (PartitionedQuery(pt)
+            .groupby(["k"], {"s": ("sum", "v")}, num_groups_cap=64)
+            .order_by("s", descending=True, limit=5))
+
+
+MAKERS = (_mk_agg, _mk_groupby, _mk_ranked, _mk_groupby_ranked)
+
+
+def _payload(r):
+    """Comparable numpy payload for any of the terminal result shapes."""
+    if hasattr(r, "num_groups"):  # MergedGroupBy
+        ng = int(r.num_groups)
+        return {**{f"k:{g}": np.asarray(r.keys[g])[:ng] for g in r.keys},
+                **{f"a:{o}": np.asarray(r.aggs[o])[:ng] for o in r.aggs}}
+    if hasattr(r, "positions"):  # RankedTable
+        return {"pos": np.asarray(r.positions),
+                **{f"c:{n}": np.asarray(r.columns[n]) for n in r.columns}}
+    return {o: np.asarray(r[o]) for o in r}  # scalar aggregate dict
+
+
+def _assert_same(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k]), k
+
+
+# ---------------------------------------------------------------------------
+# 1. concurrency correctness
+# ---------------------------------------------------------------------------
+
+
+def test_threaded_submissions_bit_identical(rng):
+    pt = _mixed_table(rng)
+    expected = [_payload(mk(pt).run()) for mk in MAKERS]
+
+    n_threads = 4
+    got = [[None] * len(MAKERS) for _ in range(n_threads)]
+    with QueryServer(pt) as srv:
+        def client(slot):
+            tickets = [srv.submit(mk(pt)) for mk in MAKERS]
+            got[slot] = [_payload(srv.result(t, timeout=120))
+                         for t in tickets]
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stats = srv.stats()
+    assert stats["completed"] == n_threads * len(MAKERS)
+    assert stats["errors"] == 0
+    for slot in range(n_threads):
+        for i, exp in enumerate(expected):
+            _assert_same(got[slot][i], exp)
+
+
+@pytest.mark.parametrize("enc", SIX_ENCODINGS)
+def test_shared_scan_equals_per_query_all_encodings(rng, enc):
+    n = 12_000
+    k = np.sort(rng.integers(0, 40, n)).astype(np.int32)
+    v = rng.integers(0, 2000, n).astype(np.int32)
+    f = rng.random(n).astype(np.float32)
+    if enc == "plain_index":
+        v = np.where(rng.random(n) < 0.002, 1_500_000_000, v).astype(np.int32)
+    if enc == "plain_dict":
+        vocab = np.array([f"key_{i:03d}" for i in range(40)])
+        data, encs = {"k": vocab[k], "v": v, "f": f}, None
+    else:
+        data, encs = {"k": k, "v": v, "f": f}, {"k": enc, "v": enc}
+    pt = PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=5,
+                                      encodings=encs, pack=True)
+
+    makers = (_mk_agg, _mk_groupby, _mk_groupby_ranked)
+    expected = [_payload(mk(pt).run()) for mk in makers]
+    srv = QueryServer(pt, start=False)
+    tickets = [srv.submit(mk(pt)) for mk in makers]
+    assert srv.step() == len(makers)  # ONE admitted batch, one pass
+    stats = srv.stats()
+    assert stats["scans"]["passes"] == 1
+    assert stats["scans"]["shared_queries"] == len(makers)
+    for t, exp in zip(tickets, expected):
+        _assert_same(_payload(srv.result(t, timeout=0)), exp)
+        assert t.shared_with == len(makers) - 1
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# 2. device-residency LRU
+# ---------------------------------------------------------------------------
+
+
+def test_hot_partition_does_zero_device_put(rng, transfer_counter):
+    pt = _mixed_table(rng)
+    srv = QueryServer(pt, start=False)  # unbounded residency budget
+    srv.submit(_mk_agg(pt))
+    srv.step()
+    cold = len(transfer_counter)
+    assert cold == len(pt.partitions)  # first pass transfers everything
+    # different shape, same partitions: ALL resident, zero device_put
+    t2 = srv.submit(_mk_groupby(pt))
+    srv.step()
+    assert len(transfer_counter) == cold
+    assert t2.stats["lru_hits"] == len(pt.partitions)
+    assert t2.stats["transferred"] == 0
+    # ranked queries ride the LRU too (solo execution path)
+    t3 = srv.submit(_mk_ranked(pt))
+    srv.step()
+    assert len(transfer_counter) == cold
+    assert t3.stats["lru_hits"] == len(pt.partitions)
+    srv.close()
+
+
+def test_lru_eviction_respects_byte_budget(rng):
+    pt = _mixed_table(rng)
+    budget = 2 * pt.max_partition_nbytes()  # room for 2 of 6 partitions
+    srv = QueryServer(pt, budget_bytes=budget, start=False)
+    for mk in (_mk_agg, _mk_groupby, _mk_agg):
+        srv.submit(mk(pt))
+        srv.step()
+    assert srv.lru.resident_bytes <= budget
+    assert srv.lru.evictions > 0
+    res = srv.stats()["residency"]
+    assert res["budget_bytes"] == budget
+    # correctness is unaffected by eviction pressure
+    t = srv.submit(_mk_groupby(pt))
+    srv.step()
+    _assert_same(_payload(srv.result(t, timeout=0)),
+                 _payload(_mk_groupby(pt).run()))
+    srv.close()
+
+
+def test_lru_unit_hit_miss_evict(rng):
+    pt = _mixed_table(rng, parts=4)
+    parts = [p for p in pt.partitions if p.rows]
+    lru = DeviceResidencyLRU(budget_bytes=2 * pt.max_partition_nbytes())
+    _, hit = lru.fetch(0, parts[0])
+    assert not hit and lru.misses == 1
+    _, hit = lru.fetch(0, parts[0])
+    assert hit and lru.hits == 1
+    for i, p in enumerate(parts):
+        lru.fetch(i, p)
+    assert lru.resident_bytes <= lru.budget_bytes
+    assert lru.evictions >= len(parts) - 2
+    lru.clear()
+    assert len(lru) == 0 and lru.resident_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# 3. plan cache
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_hit_is_retrace_free(rng):
+    pt = _mixed_table(rng)
+    srv = QueryServer(pt, start=False)
+    t1 = srv.submit(_mk_groupby(pt))
+    srv.step()
+    assert not t1.plan_hit
+    entry = next(iter(srv.plans._entries.values()))
+    traced = entry.trace_count
+    assert traced > 0 and entry.warm
+    # second submission, same shape: cache hit, trace counter FLAT
+    # (a violation would raise RuntimeError out of step())
+    t2 = srv.submit(_mk_groupby(pt))
+    srv.step()
+    assert t2.plan_hit
+    assert entry.trace_count == traced
+    assert srv.stats()["plan_cache"]["hits"] == 1
+    srv.close()
+
+
+def test_plan_signature_distinguishes_literals(rng):
+    pt = _mixed_table(rng)
+    a = PartitionedQuery(pt).filter(col("v") > 500).aggregate(
+        {"c": ("count", None)})
+    b = PartitionedQuery(pt).filter(col("v") > 501).aggregate(
+        {"c": ("count", None)})
+    c = PartitionedQuery(pt).filter(col("v") > 500).aggregate(
+        {"c": ("count", None)})
+    assert plan_signature(a.ops) != plan_signature(b.ops)
+    assert plan_signature(a.ops) == plan_signature(c.ops)
+
+
+def test_plan_cache_capacity_bounds_entries(rng):
+    pt = _mixed_table(rng)
+    srv = QueryServer(pt, plan_cache_size=2, start=False)
+    for lit in (100, 200, 300):  # three distinct signatures
+        srv.submit(PartitionedQuery(pt).filter(col("v") > lit)
+                   .aggregate({"c": ("count", None)}))
+        srv.step()
+    assert len(srv.plans) == 2  # LRU-evicted down to capacity
+    assert srv.stats()["plan_cache"]["misses"] == 3
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# 4. shared-scan attribution + admission
+# ---------------------------------------------------------------------------
+
+
+def test_shared_scan_transfer_attribution(rng, transfer_counter):
+    pt = _mixed_table(rng)
+    nparts = len(pt.partitions)
+    srv = QueryServer(pt, start=False)
+    ta = srv.submit(_mk_agg(pt))  # first taker pays the cold transfers
+    tb = srv.submit(_mk_groupby(pt))  # co-batched: rides the same copies
+    assert srv.step() == 2
+    assert len(transfer_counter) == nparts
+    assert ta.stats["transferred"] == nparts and ta.stats["shared_hits"] == 0
+    assert tb.stats["transferred"] == 0 and tb.stats["shared_hits"] == nparts
+    # per-query ``transferred`` sums to the pass's actual device_put count
+    assert ta.stats["transferred"] + tb.stats["transferred"] == nparts
+    srv.close()
+
+
+def test_budget_admission_limits_batch(rng):
+    pt = _mixed_table(rng)
+    budget = pt.max_partition_nbytes()  # one partition's worth
+    with pytest.warns(UserWarning):  # depth clamp against the tiny budget
+        srv = QueryServer(pt, budget_bytes=budget, start=False)
+        tickets = [srv.submit(_mk_agg(pt)) for _ in range(3)]
+        served = []
+        while True:
+            k = srv.step()
+            if not k:
+                break
+            served.append(k)
+    assert served == [1, 1, 1]  # the union never fits a second query
+    exp = _payload(_mk_agg(pt).run())
+    for t in tickets:
+        _assert_same(_payload(srv.result(t, timeout=0)), exp)
+    srv.close()
+
+
+def test_max_batch_knob_limits_batch(rng):
+    pt = _mixed_table(rng)
+    srv = QueryServer(pt, max_batch=2, start=False)
+    for _ in range(3):
+        srv.submit(_mk_agg(pt))
+    assert srv.step() == 2
+    assert srv.step() == 1
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# 5. stats / knobs / validation
+# ---------------------------------------------------------------------------
+
+
+def test_serving_stats_keys(rng):
+    pt = _mixed_table(rng)
+    with QueryServer(pt) as srv:
+        tickets = [srv.submit(mk(pt)) for mk in MAKERS]
+        for t in tickets:
+            srv.result(t, timeout=120)
+        s = srv.stats()
+    assert s["completed"] == len(MAKERS) and s["errors"] == 0
+    assert s["qps"] > 0
+    assert 0 < s["p50_ms"] <= s["p99_ms"]
+    for section, keys in (("plan_cache", ("hits", "misses", "hit_rate")),
+                          ("residency", ("hits", "misses", "evictions",
+                                         "resident_bytes", "hit_rate")),
+                          ("scans", ("passes", "shared_queries",
+                                     "solo_queries"))):
+        for k in keys:
+            assert k in s[section], (section, k)
+
+
+def test_serve_env_knobs():
+    pol = dispatch.policy_from_env({})
+    assert pol.serve_budget_bytes is None
+    assert pol.plan_cache_size == 32 and pol.serve_max_batch == 8
+    pol = dispatch.policy_from_env({
+        "REPRO_SERVE_BUDGET_BYTES": str(1 << 20),
+        "REPRO_PLAN_CACHE_SIZE": "4",
+        "REPRO_SERVE_MAX_BATCH": "2",
+    })
+    assert pol.serve_budget_bytes == 1 << 20
+    assert pol.plan_cache_size == 4 and pol.serve_max_batch == 2
+
+
+def test_server_reads_policy_knobs(rng):
+    pt = _mixed_table(rng)
+    with dispatch.overrides(serve_max_batch=1, plan_cache_size=3):
+        srv = QueryServer(pt, start=False)
+        assert srv.max_batch == 1 and srv.plans.capacity == 3
+        srv.close()
+
+
+def test_submit_validation(rng):
+    pt = _mixed_table(rng)
+    other = _mixed_table(rng, n=4000, parts=2)
+    srv = QueryServer(pt, start=False)
+    with pytest.raises(ValueError, match="different table"):
+        srv.submit(_mk_agg(other))
+    with pytest.raises(NotImplementedError, match="terminal"):
+        srv.submit(PartitionedQuery(pt).filter(col("v") > 0))
+    srv.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(_mk_agg(pt))
+
+
+def test_serve_module_reexported():
+    import repro.core as core
+    assert core.QueryServer is QueryServer
+    assert core.serve is serve
