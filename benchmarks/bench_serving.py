@@ -38,9 +38,11 @@ import numpy as np
 import jax
 
 from repro.core import compress
+from repro.core import telemetry
 from repro.core.partition import PartitionedQuery, PartitionedTable
 from repro.core.plan import col
 from repro.core.serve import QueryServer
+from repro.kernels import dispatch
 from benchmarks.common import ART_DIR
 from benchmarks.bench_compress import make_dict_heavy
 
@@ -119,6 +121,40 @@ def run(n=2_000_000, num_partitions=16, repeats=4,
     stats = srv.stats()
     srv.close()
 
+    # -- traced round (after timing, so it cannot perturb the gated
+    # metrics): one repeat of the mix with trace recording ON. Produces
+    # the Chrome trace artifact CI uploads, and reconciles per-query
+    # trace attribution against the tickets' own stats — the number of
+    # qid-tagged program spans must equal each ticket's ``executed``,
+    # and the tickets' summed ``transferred`` must equal the registry's
+    # ``h2d_calls`` counter (every device_put the LRU actually paid).
+    telemetry.reset()
+    with dispatch.overrides(enable_trace=True):
+        with QueryServer(pt) as tsrv:
+            tqueries = [mk(pt) for mk in makers]
+            ttickets = [tsrv.submit(q) for q in tqueries]
+            for t in ttickets:
+                tsrv.result(t, timeout=600)
+    h2d_calls = telemetry.registry().counter("h2d_calls")
+    ticket_transferred = sum(t.stats.get("transferred", 0) for t in ttickets)
+    trace_reconciled = ticket_transferred == h2d_calls
+    for t, q in zip(ttickets, tqueries):
+        # shared-scan queries emit "serve.program" per (query, partition);
+        # the solo ranked path streams through the per-query executor,
+        # whose "program" spans carry the same qid
+        spans = [e for e in telemetry.query_trace(q.qid)
+                 if e["name"] in ("serve.program", "program")]
+        trace_reconciled &= len(spans) == t.stats["executed"]
+    trace_path = os.path.join(ART_DIR, "TRACE_serving.json")
+    os.makedirs(ART_DIR, exist_ok=True)
+    telemetry.export_chrome_trace(trace_path)
+    with open(trace_path) as f:
+        trace_events = len(json.load(f)["traceEvents"])
+    print(f"  traced round: {trace_events} trace events, "
+          f"{ticket_transferred} ticket transfers vs {h2d_calls} h2d calls "
+          f"({'reconciled' if trace_reconciled else 'MISMATCH'}) "
+          f"-> {trace_path}")
+
     nq = len(workload)
     out = {
         "bench": "serving",
@@ -138,6 +174,15 @@ def run(n=2_000_000, num_partitions=16, repeats=4,
         "residency_hit_rate": stats["residency"]["hit_rate"],
         "scan_passes": stats["scans"]["passes"],
         "shared_queries": stats["scans"]["shared_queries"],
+        # CI-gated: per-query trace attribution must reconcile exactly
+        # with ticket stats and the registry's transfer counter
+        "trace": {
+            "reconciled": trace_reconciled,
+            "events": trace_events,
+            "h2d_calls": h2d_calls,
+            "ticket_transferred": ticket_transferred,
+            "artifact": "TRACE_serving.json",
+        },
     }
     os.makedirs(ART_DIR, exist_ok=True)
     path = os.path.join(ART_DIR, out_name)

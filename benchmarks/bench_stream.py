@@ -35,11 +35,12 @@ import jax
 
 from repro.core import compress
 from repro.core import partition as partition_mod
+from repro.core import telemetry
 from repro.core.partition import PartitionedQuery, PartitionedTable
 from repro.core.plan import col
 from repro.kernels import dispatch
 from benchmarks.bench_compress import make_dict_heavy
-from benchmarks.common import ART_DIR, time_interleaved
+from benchmarks.common import ART_DIR, count_h2d, time_interleaved
 
 DEPTHS = (0, 1, 2, 4)
 DEFAULT_DEPTH = 2
@@ -88,9 +89,24 @@ def run(n=2_000_000, num_partitions=16, out_name="BENCH_stream.json"):
             return out
         return go
 
+    def traced():
+        # full trace recording ON: every span site allocates an event.
+        # Interleaved against the trace-off depth-2 runner (both inside
+        # an ``overrides`` block, so the policy-swap cost cancels) this
+        # bounds the telemetry cost from above — the disabled path (the
+        # default, one policy-field read per site) does strictly less
+        # work than the enabled path timed here, so if even THIS ratio
+        # stays under the CI gate, the instrumentation cannot have
+        # regressed the untraced executor. The run emits ~100 events;
+        # the default 65536-event ring absorbs every round untrimmed.
+        with dispatch.overrides(enable_trace=True):
+            return q.run()
+
+    telemetry.reset()
+
     # the bound and every depth sample the same drift epochs
     # (common.time_interleaved): overlap_efficiency is a CI-gated RATIO
-    fns = {"bound": _compute_only_runner(pt)}
+    fns = {"bound": _compute_only_runner(pt), "traced": traced}
     fns.update({str(d): at_depth(d) for d in DEPTHS})
     best = time_interleaved(fns, rounds=5, warmup=1)
     lower_bound = best["bound"] * 1e3
@@ -113,6 +129,28 @@ def run(n=2_000_000, num_partitions=16, out_name="BENCH_stream.json"):
               f"overlap {lower_bound / ms:6.1%} | "
               f"h2d {st['h2d_ms']:7.1f} ms | merge {st['merge_ms']:6.1f} ms")
 
+    # telemetry overhead (DESIGN.md §14): traced wall over trace-off wall
+    # at the default depth, minus one. CI asserts < 2%.
+    telemetry_overhead = best["traced"] / best[str(DEFAULT_DEPTH)] - 1.0
+    print(f"  telemetry overhead (trace ON vs OFF, depth {DEFAULT_DEPTH}): "
+          f"{telemetry_overhead:+.2%}")
+
+    # EXPLAIN ANALYZE reconciliation: the analyzed run's self-reported
+    # movement must match an independent count_h2d recording of the same
+    # query exactly — partitions executed, transfer count AND bytes.
+    with dispatch.overrides(prefetch_depth=DEFAULT_DEPTH):
+        q.explain_analyze()
+        la = q.last_analysis
+        moved = []
+        with count_h2d(moved):
+            q.run()
+    reconciled = (la["executed"] == q.last_stats["executed"]
+                  and la["transferred"] == la["transfers_seen"] == len(moved)
+                  and la["bytes_moved"] == sum(moved))
+    print(f"  explain_analyze: {la['executed']} executed, "
+          f"{la['transfers_seen']} transfers, {la['bytes_moved']} bytes "
+          f"({'reconciled' if reconciled else 'MISMATCH vs count_h2d'})")
+
     report = {
         "bench": "stream_overlap",
         "backend": jax.default_backend(),
@@ -125,6 +163,17 @@ def run(n=2_000_000, num_partitions=16, out_name="BENCH_stream.json"):
         "depth0_gap": round(
             sweep["0"]["wall_ms"]
             / sweep[str(DEFAULT_DEPTH)]["wall_ms"], 3),
+        # CI-gated (< 0.02): tracing must stay in the noise
+        "telemetry_overhead": round(telemetry_overhead, 4),
+        "explain_analyze": {
+            "reconciled": reconciled,
+            "executed": la["executed"],
+            "pruned": la["pruned"],
+            "transfers_seen": la["transfers_seen"],
+            "bytes_moved": la["bytes_moved"],
+            "bytes_total": la["bytes_total"],
+            "wall_ms": la["wall_ms"],
+        },
     }
     os.makedirs(ART_DIR, exist_ok=True)
     path = os.path.join(ART_DIR, out_name)

@@ -65,21 +65,18 @@ def count_h2d(into: List[int]):
     """Count bytes crossing the partition executor's ``device_put``
     boundary (DESIGN.md §11) — the ONE shared implementation used by
     bench_compress, bench_outofcore and tests/test_packed.py, so the
-    CI-gated transfer metric and the test assertions cannot diverge."""
-    from repro.core import partition as partition_mod
+    CI-gated transfer metric and the test assertions cannot diverge.
 
-    real = partition_mod.device_put
+    Since the telemetry registry (core/telemetry.py, DESIGN.md §14)
+    became the single source of truth for H2D accounting, this is a thin
+    shim over ``telemetry.h2d_listener`` — the byte counts come from the
+    same ``record_h2d`` call that feeds the always-on ``h2d_bytes``
+    counter and the per-query traces, instead of a monkeypatched
+    ``device_put``."""
+    from repro.core import telemetry
 
-    def counting(tree):
-        into.append(sum(int(np.asarray(leaf).nbytes)
-                        for leaf in jax.tree_util.tree_leaves(tree)))
-        return real(tree)
-
-    partition_mod.device_put = counting
-    try:
+    with telemetry.h2d_listener(lambda nbytes, tree: into.append(int(nbytes))):
         yield into
-    finally:
-        partition_mod.device_put = real
 
 
 def write_csv(name: str, rows: List[Dict], print_table: bool = True):

@@ -136,6 +136,16 @@ got_units = {int(s): int(u)
 assert got_units == want_units, "partitioned result mismatch!"
 print("  (partitioned result matches numpy oracle)")
 
+# EXPLAIN ANALYZE (DESIGN.md §14): the compressed-domain plan tree —
+# per-op input encodings, chosen strategies, zone-map visit estimate —
+# plus the measured partition/transfer/stage accounting of one traced run.
+q4b = (PartitionedQuery(ptable)
+       .filter((col("region") == 2) & (col("status") == "paid"))
+       .groupby(["store"], {"total_units": ("sum", "units")},
+                num_groups_cap=1024))
+print("\nEXPLAIN ANALYZE:")
+print(q4b.explain_analyze())
+
 # Query 5: RANKED query (DESIGN.md §10) — top-10 paid rows by revenue,
 # ranked in the compressed domain; on the partitioned path, zone-map
 # pruning skips partitions that cannot beat the current 10th-best row.

@@ -27,6 +27,7 @@ program — the mask's bounds are traced values, so raggedness never retraces.
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import Dict, List, Optional, Sequence
 
@@ -45,6 +46,7 @@ from repro.core import compress, groupby
 from repro.core import order as order_mod
 from repro.core import plan as plan_mod
 from repro.core import stream
+from repro.core import telemetry
 from repro.core.encodings import make_rle_mask
 from repro.core.plan import (
     And,
@@ -79,12 +81,20 @@ def _put_columns(columns):
     bought. The bulk buffers still go through the module-global
     ``device_put`` in ONE call per partition — the stub/count contract
     that "a skipped partition is never transferred" rests on.
+
+    Every call books one transfer with the telemetry registry
+    (``record_h2d``: the always-on ``h2d_calls``/``h2d_bytes`` counters
+    plus any scoped listeners — ``benchmarks.common.count_h2d`` and the
+    test suite's transfer fixture observe HERE, DESIGN.md §14), so this
+    is the single source of truth for H2D accounting.
     """
     leaves, treedef = jax.tree_util.tree_flatten(columns)
-    bulk = [i for i, leaf in enumerate(leaves)
-            if getattr(leaf, "ndim", None) != 0]
-    dev = device_put([leaves[i] for i in bulk])
-    for i, d in zip(bulk, dev):
+    bulk_idx = [i for i, leaf in enumerate(leaves)
+                if getattr(leaf, "ndim", None) != 0]
+    bulk = [leaves[i] for i in bulk_idx]
+    telemetry.record_h2d(sum(getattr(b, "nbytes", 0) for b in bulk), bulk)
+    dev = device_put(bulk)
+    for i, d in zip(bulk_idx, dev):
         leaves[i] = d
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
@@ -451,16 +461,55 @@ def _definitely_all(expr, zl: Dict[str, float], zh: Dict[str, float],
     return False
 
 
-def partition_can_match(part: Partition, ops, table: PartitionedTable) -> bool:
-    """False iff zone maps PROVE no row of ``part`` survives all filters and
-    semi-joins — the partition-skipping decision (L3-style pushdown).
+def _zone_str(lo, hi) -> str:
+    return f"zone [{lo:g}, {hi:g}]"
 
-    Ops are walked in pipeline order: a ``map`` rebinding a column name
+
+def _expr_cause(expr, zl, zh, table) -> str:
+    """The predicate bound responsible for a refuted expression — called
+    only after ``_maybe_any(expr, ...)`` returned False, so every branch
+    may assume its subtree is (or contains) a proof. The rendering feeds
+    zone-map telemetry instants, ``last_stats['pruned_by']`` and
+    ``explain_analyze`` (DESIGN.md §14)."""
+    if isinstance(expr, Pred):
+        if expr.col in zl and zl[expr.col] > zh[expr.col]:
+            return f"{expr.col}: empty zone"
+        return (f"{expr.col} {expr.op} {expr.literal!r} outside "
+                f"{_zone_str(zl[expr.col], zh[expr.col])}")
+    if isinstance(expr, RangePred):
+        if expr.col in zl and zl[expr.col] > zh[expr.col]:
+            return f"{expr.col}: empty zone"
+        lo_b = "[" if expr.lo_incl else "("
+        hi_b = "]" if expr.hi_incl else ")"
+        return (f"{expr.col} in {lo_b}{expr.lo!r}, {expr.hi!r}{hi_b} "
+                f"outside {_zone_str(zl[expr.col], zh[expr.col])}")
+    if isinstance(expr, And):
+        # one refuted conjunct suffices; name the first
+        if not _maybe_any(expr.a, zl, zh, table):
+            return _expr_cause(expr.a, zl, zh, table)
+        return _expr_cause(expr.b, zl, zh, table)
+    if isinstance(expr, Or):
+        return (f"({_expr_cause(expr.a, zl, zh, table)}) and "
+                f"({_expr_cause(expr.b, zl, zh, table)})")
+    if isinstance(expr, Not):
+        return "negated predicate holds on the whole zone"
+    return "refuted predicate"
+
+
+def partition_match_verdict(part: Partition, ops,
+                            table: PartitionedTable):
+    """``(can_match, cause)``: the partition-skipping decision PLUS the
+    zone-map proof that justified a skip (L3-style pushdown, DESIGN.md §4).
+
+    ``can_match`` is False iff zone maps PROVE no row of ``part`` survives
+    all filters and semi-joins; ``cause`` is then the responsible
+    predicate bound rendered as text (None on a visit verdict). Ops are
+    walked in pipeline order: a ``map`` rebinding a column name
     invalidates that column's zone maps for every LATER filter/semi-join
     (the ingest-time min/max describe the original values, not the mapped
     ones), so those predicates fall back to "cannot prune"."""
     if part.rows == 0:
-        return False
+        return False, "empty partition"
     zl, zh = dict(part.zone_lo), dict(part.zone_hi)
     for op in ops:
         if isinstance(op, _MapOp):
@@ -468,14 +517,15 @@ def partition_can_match(part: Partition, ops, table: PartitionedTable) -> bool:
             zh.pop(op.out, None)
         elif isinstance(op, _FilterOp):
             if not _maybe_any(op.expr, zl, zh, table):
-                return False
+                return False, _expr_cause(op.expr, zl, zh, table)
         elif isinstance(op, _SemiJoinOp):
             if op.on not in zl:
                 continue
             lo, hi = zl[op.on], zh[op.on]
             keys = np.asarray(op.keys)
             if not np.any((keys >= lo) & (keys <= hi)):
-                return False
+                return False, (f"semi_join: no {op.on} key in "
+                               f"{_zone_str(lo, hi)}")
         elif isinstance(op, _JoinOp):
             # FK zone-map pushdown (DESIGN.md §6): the surviving dimension
             # key set (prepared eagerly, once) prunes fact partitions whose
@@ -485,13 +535,19 @@ def partition_can_match(part: Partition, ops, table: PartitionedTable) -> bool:
             if keys is not None and op.fk in zl:
                 lo, hi = zl[op.fk], zh[op.fk]
                 if not np.any((keys >= lo) & (keys <= hi)):
-                    return False
+                    return False, (f"join: no dimension key for {op.fk} in "
+                                   f"{_zone_str(lo, hi)}")
             # gathered columns rebind names: ingest zone maps for any
             # shadowed fact column no longer describe the pipeline values
             for out in op.out:
                 zl.pop(out, None)
                 zh.pop(out, None)
-    return True
+    return True, None
+
+
+def partition_can_match(part: Partition, ops, table: PartitionedTable) -> bool:
+    """The bare skip/visit verdict (see ``partition_match_verdict``)."""
+    return partition_match_verdict(part, ops, table)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -542,6 +598,9 @@ class PartitionedQuery(Query):
         super().__init__(table)
         self.trace_count = 0
         self.last_stats: Dict[str, int] = {}
+        # (index, visit?, prune cause) per partition, from the last run's
+        # zone-map pass (partition_match_verdict, DESIGN.md §14)
+        self.last_verdicts: List[tuple] = []
         # ranked zone-map pruning (DESIGN.md §10): once `limit` candidate
         # rows are held, partitions whose ORDER-BY-key zone map cannot beat
         # the current k-th best are never transferred. Off switch exists
@@ -590,7 +649,92 @@ class PartitionedQuery(Query):
         depth = stream.clamp_depth(dispatch.policy().prefetch_depth,
                                    ptable.max_partition_nbytes(),
                                    ptable.budget_bytes)
-        return depth, stream.StreamStats(prefetch_depth=depth)
+        return depth, stream.StreamStats(prefetch_depth=depth,
+                                         qid=getattr(self, "qid", None))
+
+    # -- observability: EXPLAIN / EXPLAIN ANALYZE (DESIGN.md §14) -----------
+
+    def explain(self) -> str:
+        """Static plan tree plus the zone-map partition estimate: how many
+        partitions the CURRENT ops would visit/skip. Join FK pruning needs
+        the prepared dimension key set, which only exists at run time, so
+        the estimate is conservative (no join-based skips) until a run has
+        recorded ``host_keys``."""
+        lines = self._explain_lines()
+        ptable: PartitionedTable = self.table
+        est = sum(1 for p in ptable.partitions
+                  if partition_can_match(p, self.ops, ptable))
+        total = len(ptable.partitions)
+        note = ""
+        if any(isinstance(op, _JoinOp) and op.host_keys is None
+               for op in self.ops):
+            note = "; join FK pruning resolves at run time"
+        lines.append(f"estimated partitions: visit {est} / skip "
+                     f"{total - est} of {total} (zone maps{note})")
+        return "\n".join(lines)
+
+    def explain_analyze(self, jit: bool = True) -> str:
+        """EXPLAIN annotated with one measured streamed execution.
+
+        Runs the query with tracing force-enabled and an H2D listener
+        capturing exact transfer bytes, then renders the plan with the
+        actuals: partitions visited/pruned (and the responsible predicate
+        bounds), transfers + bytes moved vs the table's total ingested
+        bytes, and the pipeline's per-stage ms. The numbers are the SAME
+        objects ``last_stats`` / ``count_h2d`` report — the machine-
+        readable copy lands in ``self.last_analysis`` and CI asserts the
+        reconciliation (bench_stream).
+        """
+        from repro.kernels import dispatch
+
+        moved: List[int] = []
+        with dispatch.overrides(enable_trace=True), \
+                telemetry.h2d_listener(lambda nbytes, tree:
+                                       moved.append(nbytes)):
+            t0 = time.perf_counter()
+            self.run(jit=jit)
+            wall = (time.perf_counter() - t0) * 1e3
+        st = self.last_stats
+        ptable: PartitionedTable = self.table
+        analysis = {
+            "wall_ms": round(wall, 3),
+            "partitions": st.get("partitions", 0),
+            "executed": st.get("executed", 0),
+            "pruned": st.get("skipped", 0),
+            "ranked_skipped": st.get("ranked_skipped", 0),
+            "pruned_by": dict(st.get("pruned_by", {})),
+            "transferred": st.get("transferred", 0),
+            "transfers_seen": len(moved),
+            "bytes_moved": int(sum(moved)),
+            "bytes_total": int(ptable.nbytes()),
+            "h2d_ms": st.get("h2d_ms", 0.0),
+            "compute_ms": st.get("compute_ms", 0.0),
+            "merge_ms": st.get("merge_ms", 0.0),
+            "prefetch_depth": st.get("prefetch_depth", 0),
+            "trace_count": self.trace_count,
+            "qid": self.qid,
+        }
+        self.last_analysis = analysis
+        a = analysis
+        lines = self._explain_lines()
+        lines.append(
+            f"actual: wall {a['wall_ms']:.3f} ms "
+            f"(depth-{a['prefetch_depth']} pipeline, "
+            f"{a['trace_count']} traced program"
+            f"{'s' if a['trace_count'] != 1 else ''}, qid={a['qid']})")
+        ranked = (f" + {a['ranked_skipped']} ranked-pruned"
+                  if a["ranked_skipped"] else "")
+        lines.append(
+            f"  partitions: {a['executed']} executed / {a['pruned']} "
+            f"zone-pruned{ranked} of {a['partitions']}; "
+            f"{a['transferred']} transfers, {a['bytes_moved']} of "
+            f"{a['bytes_total']} ingested bytes moved")
+        for cause, n in sorted(a["pruned_by"].items()):
+            lines.append(f"  pruned x{n}: {cause}")
+        lines.append(
+            f"  stage ms: h2d {a['h2d_ms']:.3f} | compute "
+            f"{a['compute_ms']:.3f} | merge {a['merge_ms']:.3f}")
+        return "\n".join(lines)
 
     def run(self, jit: bool = True):
         terminal = self.terminal_op()
@@ -606,19 +750,36 @@ class PartitionedQuery(Query):
         execute = self._make_executor(jit)
 
         ptable: PartitionedTable = self.table
-        todo = [p for p in ptable.partitions
-                if partition_can_match(p, self.ops, ptable)]
+        todo = []
+        pruned_by: Dict[str, int] = {}
+        self.last_verdicts = []
+        for i, p in enumerate(ptable.partitions):
+            ok, cause = partition_match_verdict(p, self.ops, ptable)
+            self.last_verdicts.append((i, ok, cause))
+            telemetry.instant("zone_map", "main", qid=self.qid, part=i,
+                              verdict="visit" if ok else "skip", cause=cause)
+            if ok:
+                todo.append(p)
+            else:
+                pruned_by[cause] = pruned_by.get(cause, 0) + 1
         self.last_stats = {
             "partitions": len(ptable.partitions),
             "executed": len(todo),
             "skipped": len(ptable.partitions) - len(todo),
+            "pruned_by": pruned_by,
         }
         depth, stats = self._depth_and_stats(ptable)
+        # trace spans name partitions by their ingest index, matching the
+        # zone_map verdict instants above
+        pidx = {id(p): i for i, p in enumerate(ptable.partitions)}
+
+        def label_of(p):
+            return pidx.get(id(p))
         if terminal is None:
             # row-terminal ranked query: distributed top-k merge with
             # ranked zone-map pruning and speculative prefetch
             return self._run_ranked(oop, execute, key_sets, todo, depth,
-                                    stats)
+                                    stats, label_of)
 
         transfer = self._transfer
 
@@ -634,7 +795,8 @@ class PartitionedQuery(Query):
 
             acc = stream.pipelined_fold(todo, transfer, compute, fold, None,
                                         depth, stats,
-                                        nbytes_of=Partition.nbytes)
+                                        nbytes_of=Partition.nbytes,
+                                        label_of=label_of)
             self.last_stats.update(stats.as_dict())
             return plan_mod.finalize_scalar_partials(
                 acc, terminal.specs, col_dtypes=ptable.col_dtypes)
@@ -647,7 +809,8 @@ class PartitionedQuery(Query):
                                                 partial_specs)
 
         acc = stream.pipelined_fold(todo, transfer, compute, fold, None,
-                                    depth, stats, nbytes_of=Partition.nbytes)
+                                    depth, stats, nbytes_of=Partition.nbytes,
+                                    label_of=label_of)
         self.last_stats.update(stats.as_dict())
         merged = groupby.finalize_groupby_partials(acc, group_names,
                                                    terminal.specs)
@@ -673,7 +836,7 @@ class PartitionedQuery(Query):
         return False
 
     def _run_ranked(self, oop: _OrderByOp, execute, key_sets, todo,
-                    depth: int, stats: stream.StreamStats):
+                    depth: int, stats: stream.StreamStats, label_of=None):
         ptable: PartitionedTable = self.table
         key0, desc0 = oop.by[0], oop.descending[0]
         prunable = (self.ranked_pruning and oop.limit is not None
@@ -722,7 +885,7 @@ class PartitionedQuery(Query):
 
         state, ranked_skipped, wasted = stream.pipelined_ranked_fold(
             items, transfer, compute, fold, prune, depth, stats,
-            nbytes_of=Partition.nbytes)
+            nbytes_of=Partition.nbytes, label_of=label_of)
         # coherent stats invariant: partitions == executed + skipped
         # + ranked_skipped. The seed overwrote ``executed`` here while
         # ``skipped`` kept only the zone-map count, leaving readers to

@@ -17,6 +17,7 @@ Appendix D optimization rules implemented here:
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -36,6 +37,7 @@ from repro.core.encodings import (
     decode_mask,
     unpack_values,
 )
+from repro.core import telemetry
 from repro.core.table import Table
 from repro.kernels import dispatch
 
@@ -273,6 +275,28 @@ class _OrderByOp:
     cols: Optional[Tuple[str, ...]] = None
 
 
+def _expr_str(expr) -> str:
+    """Compact one-line rendering of a predicate tree (EXPLAIN output)."""
+    if isinstance(expr, Pred):
+        return f"{expr.col} {expr.op} {expr.literal!r}"
+    if isinstance(expr, RangePred):
+        lo_b = "[" if expr.lo_incl else "("
+        hi_b = "]" if expr.hi_incl else ")"
+        return f"{expr.col} in {lo_b}{expr.lo!r}, {expr.hi!r}{hi_b}"
+    if isinstance(expr, And):
+        return f"({_expr_str(expr.a)}) & ({_expr_str(expr.b)})"
+    if isinstance(expr, Or):
+        return f"({_expr_str(expr.a)}) | ({_expr_str(expr.b)})"
+    if isinstance(expr, Not):
+        return f"~({_expr_str(expr.a)})"
+    return repr(expr)
+
+
+def _agg_str(specs) -> str:
+    return ", ".join(f"{o}={a}({c})" if c else f"{o}={a}(*)"
+                     for o, a, c in specs)
+
+
 def _expr_signature(expr):
     """Hashable description of a predicate tree, literals included."""
     if expr is None:
@@ -404,6 +428,10 @@ class Query:
     def __init__(self, table: Table):
         self.table = table
         self.ops: List[object] = []
+        # process-unique query id: every telemetry span/instant this query
+        # causes is tagged with it, and query_trace(qid) isolates its
+        # events in a shared trace (DESIGN.md §14)
+        self.qid = telemetry.next_qid()
 
     def _schema(self) -> _SchemaView:
         return _SchemaView(self.table, self.ops)
@@ -648,6 +676,127 @@ class Query:
             if isinstance(op, _OrderByOp):
                 return op
         return None
+
+    # -- observability: EXPLAIN / EXPLAIN ANALYZE (DESIGN.md §14) -----------
+
+    def _group_path(self, op: "_GroupByOp") -> str:
+        """The grouping implementation the CURRENT policy + ingest metadata
+        select (mirrors groupby._bounded_key_domain's gate; the dtype check
+        it also applies is trace-time, so this is the planner's estimate)."""
+        pol = dispatch.policy()
+        if not pol.enable_sort_free:
+            return "argsort grouping (sort-free disabled)"
+        doms = _groupby_key_domains(self.ops, self.table)
+        if doms is None or any(g not in doms for g in op.group):
+            return "argsort grouping (no ingest domain for every key)"
+        prod = 1
+        for g in op.group:
+            prod *= int(doms[g][1])
+        if prod > pol.sort_free_max_domain:
+            return (f"argsort grouping (key domain {prod} > "
+                    f"sort_free_max_domain={pol.sort_free_max_domain})")
+        return f"sort-free scatter (key domain {prod})"
+
+    def _order_path(self, oop: "_OrderByOp") -> str:
+        """The ranking path the policy + encodings select (mirrors
+        order.top_k_rows's entry/bounded gates)."""
+        pol = dispatch.policy()
+        if any(isinstance(o, _GroupByOp) for o in self.ops):
+            return "rank group slots after merge"
+        if not pol.enable_entry_order:
+            return "row-level top-k (entry ordering disabled)"
+        walk = _SchemaView(self.table, self.ops)
+        encs = [walk.encoding_of(b) for b in oop.by]
+        if not all(("RLE" in e or "Index" in e) for e in encs):
+            return "row-level top-k (keys not entry-encoded)"
+        doms = _order_key_domains(self.ops, self.table)
+        if doms is not None and all(b in doms for b in oop.by):
+            prod = 1
+            for b in oop.by:
+                prod *= int(doms[b][1])
+            if prod <= pol.sort_free_max_domain:
+                return f"bounded-histogram rank (key domain {prod})"
+        return "entry-granularity sort"
+
+    def _explain_lines(self) -> List[str]:
+        """One line per staged op: the op, the referenced columns' stored
+        encodings AT THAT PIPELINE POSITION (a later join/map rebinding a
+        name does not retroactively change an earlier filter's view), and
+        the execution path the current dispatch policy selects."""
+        table = self.table
+        head = (f"{type(self).__name__} qid={self.qid}: "
+                f"{type(table).__name__}, {getattr(table, 'nrows', '?')} rows")
+        parts = getattr(table, "partitions", None)
+        if parts is not None:
+            head += f", {len(parts)} partitions"
+        lines = [head]
+        walk = _SchemaView(table)
+        pad = "  "
+
+        def enc(cols):
+            uniq = list(dict.fromkeys(c for c in cols if c))
+            return ", ".join(f"{c}:{walk.encoding_of(c)}" for c in uniq)
+
+        for op in self.ops:
+            if isinstance(op, _FilterOp):
+                cols = _pred_cols(op.expr)
+                lines.append(f"{pad}filter {_expr_str(op.expr)}"
+                             f"  [{enc(cols)}]")
+            elif isinstance(op, _SemiJoinOp):
+                lines.append(f"{pad}semi_join on {op.on} "
+                             f"({len(np.unique(op.keys))} keys)"
+                             f"  [{enc([op.on])}]")
+            elif isinstance(op, _JoinOp):
+                lines.append(f"{pad}join {op.fk}->{op.on} "
+                             f"gather {list(op.cols)}"
+                             "  [path: entry-granularity PK-FK probe, "
+                             f"FK zone-map pushdown; {enc([op.fk])}]")
+            elif isinstance(op, _MapOp):
+                lines.append(f"{pad}map -> {op.out}  [computed column: "
+                             "zone maps / domains invalidated]")
+            elif isinstance(op, _GroupByOp):
+                cols = list(op.group) + [c for _, _, c in op.specs]
+                lines.append(f"{pad}groupby[{', '.join(op.group)}] "
+                             f"{_agg_str(op.specs)}"
+                             f"  [path: {self._group_path(op)}; {enc(cols)}]")
+            elif isinstance(op, _AggOp):
+                cols = [c for _, _, c in op.specs]
+                tail = f"; {enc(cols)}" if any(cols) else ""
+                lines.append(f"{pad}aggregate {_agg_str(op.specs)}"
+                             f"  [path: fused single-pass reduction{tail}]")
+            elif isinstance(op, _OrderByOp):
+                lines.append(f"{pad}order_by[{', '.join(op.by)}] "
+                             f"limit={op.limit}"
+                             f"  [path: {self._order_path(op)}; "
+                             f"{enc(list(op.by))}]")
+            walk.observe(op)
+            pad += "  "
+        return lines
+
+    def explain(self) -> str:
+        """Compressed-domain plan tree (EXPLAIN): per-op input encodings
+        and the execution paths the current policy picks. Static — nothing
+        executes, nothing transfers. The text is stable enough to pin
+        substrings in tests, not an exact-layout contract."""
+        return "\n".join(self._explain_lines())
+
+    def explain_analyze(self, jit: bool = True) -> str:
+        """EXPLAIN plus measured execution (EXPLAIN ANALYZE): runs the
+        query once with tracing force-enabled and appends actuals. The
+        resident-table path is ONE fused program, so the actuals are the
+        wall clock and the trace/retrace behavior; the partitioned
+        override adds per-stage ms and partition visit/prune/transfer
+        accounting (``PartitionedQuery.explain_analyze``)."""
+        with dispatch.overrides(enable_trace=True):
+            t0 = time.perf_counter()
+            self.run(jit=jit)
+            wall = (time.perf_counter() - t0) * 1e3
+        self.last_analysis = {"wall_ms": round(wall, 3)}
+        lines = self._explain_lines()
+        lines.append(f"actual: wall {wall:.3f} ms, one fused "
+                     f"{'jitted' if jit else 'eager'} program over the "
+                     "resident table")
+        return "\n".join(lines)
 
     def _ranked_dictionaries(self) -> Dict[str, np.ndarray]:
         """name -> dictionary for decoding a ranked result's columns: base

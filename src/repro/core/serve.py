@@ -62,6 +62,7 @@ from repro.core import groupby
 from repro.core import order as order_mod
 from repro.core import plan as plan_mod
 from repro.core import stream
+from repro.core import telemetry
 from repro.core.partition import (
     Partition,
     PartitionedQuery,
@@ -69,6 +70,7 @@ from repro.core.partition import (
     _put_columns,
     base_masked_program,
     partition_can_match,
+    partition_match_verdict,
 )
 from repro.core.plan import _AggOp, _GroupByOp
 
@@ -441,10 +443,21 @@ class QueryServer:
         sig = plan_mod.plan_signature(q.ops)
         entry, hit = self.plans.get_or_build(sig, self._build_entry(q))
         ticket.plan_hit = hit
-        todo = [(i, p) for i, p in enumerate(self.table.partitions)
-                if partition_can_match(p, q.ops, self.table)]
+        telemetry.instant("serve.plan", qid=q.qid, ticket=ticket.qid,
+                          hit=hit)
+        todo = []
+        for i, p in enumerate(self.table.partitions):
+            ok, cause = partition_match_verdict(p, q.ops, self.table)
+            telemetry.instant("zone_map", qid=q.qid, part=i,
+                              verdict="visit" if ok else "skip", cause=cause)
+            if ok:
+                todo.append((i, p))
         item = _Prepped(ticket, key_sets, entry, hit, todo, q.terminal_op(),
                         q.order_op())
+        # served spans are tagged with the QUERY's process-unique qid (the
+        # same id a solo run() would use), so one trace separates
+        # co-batched queries; the ticket id stays a server-local counter
+        item.stats.qid = q.qid
         if isinstance(item.terminal, _AggOp):
             _agg_folder(item, self.table.col_dtypes)
         elif isinstance(item.terminal, _GroupByOp):
@@ -508,6 +521,7 @@ class QueryServer:
         pass_stats = stream.StreamStats(prefetch_depth=depth)
         for it in items:
             it.stats.prefetch_depth = depth
+        tel = telemetry.registry() if telemetry.enabled() else None
 
         def transfer(part_item):
             pid, part = part_item
@@ -523,27 +537,45 @@ class QueryServer:
                 t0 = time.perf_counter()
                 partials[i] = items[i].entry.program(
                     tree, items[i].key_sets, part.rows)
-                st.compute_ms += (time.perf_counter() - t0) * 1e3
+                t1 = time.perf_counter()
                 st.executed += 1
                 if was_hit:
                     st.lru_hits += 1
+                    src = "lru"
                 elif i == payer:
                     st.transferred += 1
+                    src = "miss"
                 else:
                     st.shared_hits += 1
+                    src = "shared"
+                # one span per (query, partition) pair: the shared pass
+                # fans a single scan out to every subscriber, and each
+                # span carries that query's qid plus how the bytes were
+                # sourced — so per-query trace sums reconcile with stats()
+                stream.emit_stage(tel, st, "compute_ms", "serve.program",
+                                  t0, t1, "device",
+                                  {"part": pid, "src": src})
             return partials
 
         def fold(accs, part_item, partials):
+            pid = part_item[0]
             for i, partial in partials.items():
                 st = items[i].stats
                 t0 = time.perf_counter()
                 accs[i] = items[i].fold(accs[i], partial)
-                st.merge_ms += (time.perf_counter() - t0) * 1e3
+                stream.emit_stage(tel, st, "merge_ms", "serve.fold",
+                                  t0, time.perf_counter(), "main",
+                                  {"part": pid})
             return accs
 
-        accs = stream.pipelined_fold(
-            scan, transfer, compute, fold, {i: None for i in range(len(items))},
-            depth, pass_stats, nbytes_of=lambda pi: pi[1].nbytes())
+        with telemetry.span("serve.batch", "main",
+                            queries=len(items), partitions=len(scan),
+                            qids=[it.stats.qid for it in items]):
+            accs = stream.pipelined_fold(
+                scan, transfer, compute, fold,
+                {i: None for i in range(len(items))},
+                depth, pass_stats, nbytes_of=lambda pi: pi[1].nbytes(),
+                label_of=lambda pi: pi[0])
         with self._stats_lock:
             self._scan_passes += 1
             if len(items) > 1:

@@ -43,7 +43,11 @@ recorded per run (``StreamStats``): ``h2d_ms`` / ``compute_ms`` /
 ``merge_ms`` are MAIN-thread wall time spent waiting on transfers,
 dispatching + waiting on device programs, and folding partials
 respectively — a fully hidden transfer shows up as ``h2d_ms ~ 0``, and
-under overlap the three need not sum to the elapsed wall time.
+under overlap the three need not sum to the elapsed wall time. With
+tracing enabled (``REPRO_TRACE``, DESIGN.md §14) every stage interval is
+ALSO recorded as a telemetry span — ``emit_stage`` folds the stat and the
+span from the same timestamp pair, so ``StreamStats`` and the Chrome
+trace reconcile by construction.
 """
 from __future__ import annotations
 
@@ -55,6 +59,8 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
+
+from repro.core import telemetry
 
 
 @dataclasses.dataclass
@@ -77,18 +83,41 @@ class StreamStats:
     # device_put count. Standalone PartitionedQuery runs leave both at 0.
     lru_hits: int = 0
     shared_hits: int = 0
+    # query id the run's trace spans are tagged with (telemetry.next_qid
+    # via plan.Query; None on runs driven outside the query layer)
+    qid: Optional[int] = None
 
     def as_dict(self) -> dict:
-        return {
-            "prefetch_depth": self.prefetch_depth,
-            "h2d_ms": round(self.h2d_ms, 3),
-            "compute_ms": round(self.compute_ms, 3),
-            "merge_ms": round(self.merge_ms, 3),
-            "inflight_bytes_max": self.inflight_bytes_max,
-            "transferred": self.transferred,
-            "lru_hits": self.lru_hits,
-            "shared_hits": self.shared_hits,
-        }
+        # generic over the dataclass fields so a field can never again be
+        # populated-but-dropped (the seed's as_dict silently omitted
+        # ``executed`` from every bench JSON; tests/test_telemetry.py pins
+        # completeness)
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            out[f.name] = round(v, 3) if f.name.endswith("_ms") else v
+        return out
+
+
+_EMPTY: dict = {}
+
+
+def emit_stage(tel, stats: StreamStats, field: Optional[str], name: str,
+               t0: float, t1: float, track: str = "main",
+               attrs: dict = _EMPTY) -> None:
+    """Fold one stage interval into ``stats`` AND record it as a span.
+
+    The ``StreamStats`` a run reports and the spans in its trace come from
+    the SAME timestamp pairs, so ``explain_analyze`` / bench JSONs and the
+    Chrome trace reconcile by construction. ``tel`` is the resolved
+    registry or None (tracing disabled — only the stats add happens);
+    ``field=None`` records a span with no stats counterpart (the device
+    track's dispatch->retire window, already counted via its halves).
+    """
+    if field is not None:
+        setattr(stats, field, getattr(stats, field) + (t1 - t0) * 1e3)
+    if tel is not None:
+        tel.record(name, t0, t1 - t0, track, qid=stats.qid, **attrs)
 
 
 def clamp_depth(depth: int, max_part_nbytes: int,
@@ -124,7 +153,8 @@ def _block(x) -> None:
 
 def pipelined_fold(items: Sequence, transfer: Callable, compute: Callable,
                    fold: Callable, init, depth: int, stats: StreamStats,
-                   nbytes_of: Optional[Callable] = None):
+                   nbytes_of: Optional[Callable] = None,
+                   label_of: Optional[Callable] = None):
     """Run ``fold(acc, item, compute(item, transfer(item)))`` over ``items``
     as a depth-``depth`` software pipeline; returns the final ``acc``.
 
@@ -143,22 +173,35 @@ def pipelined_fold(items: Sequence, transfer: Callable, compute: Callable,
     after blocking on partial ``i`` and before folding it, so the fold
     and the next program overlap without ever enqueueing two programs
     against each other (drain included — no global barrier).
+
+    ``label_of(item)`` (optional) names the partition in trace spans'
+    ``part`` attr. All spans carry ``stats.qid``.
     """
+    tel = telemetry.registry() if telemetry.enabled() else None
+
+    def attr(item):
+        if tel is None or label_of is None:
+            return _EMPTY
+        return {"part": label_of(item)}
+
     acc = init
     if depth <= 0:
         for item in items:
+            a = attr(item)
             t0 = time.perf_counter()
             cols = transfer(item)
             _block(cols)
             t1 = time.perf_counter()
+            emit_stage(tel, stats, "h2d_ms", "transfer", t0, t1,
+                       "transfer", a)
             partial = compute(item, cols)
             _block(partial)
             t2 = time.perf_counter()
+            emit_stage(tel, stats, "compute_ms", "program", t1, t2,
+                       "device", a)
             acc = fold(acc, item, partial)
             t3 = time.perf_counter()
-            stats.h2d_ms += (t1 - t0) * 1e3
-            stats.compute_ms += (t2 - t1) * 1e3
-            stats.merge_ms += (t3 - t2) * 1e3
+            emit_stage(tel, stats, "merge_ms", "fold", t2, t3, "main", a)
             stats.transferred += 1
             stats.executed += 1
             if nbytes_of is not None:
@@ -167,9 +210,20 @@ def pipelined_fold(items: Sequence, transfer: Callable, compute: Callable,
         return acc
 
     ring: deque = deque()  # (item, future cols): transfers in flight
-    pending = None  # (item, async partial): the ONE dispatched program
+    pending = None  # (item, async partial, t_disp): the ONE dispatched program
     idx = 0
     inflight = 0
+
+    def do_transfer(item):
+        # runs on the worker thread; the span is the copy-issue window
+        # there, rendered on the transfer track
+        if tel is None:
+            return transfer(item)
+        t0 = time.perf_counter()
+        cols = transfer(item)
+        tel.record("transfer", t0, time.perf_counter() - t0, "transfer",
+                   qid=stats.qid, **attr(item))
+        return cols
 
     with ThreadPoolExecutor(max_workers=1) as pool:
 
@@ -182,7 +236,7 @@ def pipelined_fold(items: Sequence, transfer: Callable, compute: Callable,
                    and idx < len(items)):
                 item = items[idx]
                 idx += 1
-                ring.append((item, pool.submit(transfer, item)))
+                ring.append((item, pool.submit(do_transfer, item)))
                 stats.transferred += 1
                 if nbytes_of is not None:
                     inflight += nbytes_of(item)
@@ -191,32 +245,38 @@ def pipelined_fold(items: Sequence, transfer: Callable, compute: Callable,
 
         def dispatch_head():
             item, fut = ring.popleft()
+            a = attr(item)
             t0 = time.perf_counter()
             cols = fut.result()  # ~0 when the copy hid behind compute
             t1 = time.perf_counter()
+            emit_stage(tel, stats, "h2d_ms", "h2d_wait", t0, t1, "main", a)
             partial = compute(item, cols)
             t2 = time.perf_counter()
-            stats.h2d_ms += (t1 - t0) * 1e3
-            stats.compute_ms += (t2 - t1) * 1e3
+            emit_stage(tel, stats, "compute_ms", "dispatch", t1, t2,
+                       "main", a)
             stats.executed += 1
-            return item, partial
+            return item, partial, t2
 
         top_up()
         if ring:
             pending = dispatch_head()
         while pending is not None:
-            item, partial = pending
+            item, partial, t_disp = pending
+            a = attr(item)
             t0 = time.perf_counter()
             _block(partial)  # the device is the gate
             t1 = time.perf_counter()
-            stats.compute_ms += (t1 - t0) * 1e3
+            emit_stage(tel, stats, "compute_ms", "block", t0, t1, "main", a)
+            # the program's dispatch->retire window on the device track;
+            # its halves already fed compute_ms, so no stats field here
+            emit_stage(tel, stats, None, "program", t_disp, t1, "device", a)
             # program ``i`` retired: launch ``i+1`` BEFORE folding ``i``
             # so the fold below runs under the next program, not after it
             pending = dispatch_head() if ring else None
             t1 = time.perf_counter()
             acc = fold(acc, item, partial)
             t2 = time.perf_counter()
-            stats.merge_ms += (t2 - t1) * 1e3
+            emit_stage(tel, stats, "merge_ms", "fold", t1, t2, "main", a)
             if nbytes_of is not None:
                 inflight -= nbytes_of(item)
             # the fold head advanced: replenish the transfer ring (these
@@ -229,7 +289,8 @@ def pipelined_ranked_fold(items: Sequence, transfer: Callable,
                           compute: Callable, fold: Callable,
                           prune: Callable, depth: int,
                           stats: StreamStats,
-                          nbytes_of: Optional[Callable] = None
+                          nbytes_of: Optional[Callable] = None,
+                          label_of: Optional[Callable] = None
                           ) -> Tuple[object, int, int]:
     """Ranked (TOP-K) pipeline: speculative prefetch, bound-gated execution.
 
@@ -252,6 +313,22 @@ def pipelined_ranked_fold(items: Sequence, transfer: Callable,
     ``prefetch_wasted`` counts transferred-then-pruned items (a subset of
     ``ranked_skipped``).
     """
+    tel = telemetry.registry() if telemetry.enabled() else None
+
+    def attr(item):
+        if tel is None or label_of is None:
+            return _EMPTY
+        return {"part": label_of(item)}
+
+    def do_transfer(item):
+        if tel is None:
+            return transfer(item)
+        t0 = time.perf_counter()
+        cols = transfer(item)
+        tel.record("transfer", t0, time.perf_counter() - t0, "transfer",
+                   qid=stats.qid, **attr(item))
+        return cols
+
     state = None
     ring: deque = deque()  # (item, future cols) transferred, not yet gated
     idx = 0
@@ -265,9 +342,12 @@ def pipelined_ranked_fold(items: Sequence, transfer: Callable,
                 idx += 1
                 if prune(state, item):
                     skipped += 1
+                    if tel is not None:
+                        tel.instant("ranked_prune", "main", qid=stats.qid,
+                                    stage="issue", **attr(item))
                     continue
                 # speculative, off-thread: bytes at risk, not results
-                ring.append((item, pool.submit(transfer, item)))
+                ring.append((item, pool.submit(do_transfer, item)))
                 stats.transferred += 1
                 if nbytes_of is not None:
                     inflight += nbytes_of(item)
@@ -281,18 +361,24 @@ def pipelined_ranked_fold(items: Sequence, transfer: Callable,
             if prune(state, item):  # merges since issue tightened the bound
                 skipped += 1
                 wasted += 1
+                if tel is not None:
+                    tel.instant("ranked_prune", "main", qid=stats.qid,
+                                stage="head", wasted_transfer=True,
+                                **attr(item))
                 fut.cancel()  # un-started copies are dropped entirely
                 continue
+            a = attr(item)
             t0 = time.perf_counter()
             cols = fut.result()
             t1 = time.perf_counter()
+            emit_stage(tel, stats, "h2d_ms", "h2d_wait", t0, t1, "main", a)
             partial = compute(item, cols)  # gated: pruned items never run
             _block(partial)
             t2 = time.perf_counter()
+            emit_stage(tel, stats, "compute_ms", "program", t1, t2,
+                       "device", a)
             state = fold(state, item, partial)
             t3 = time.perf_counter()
-            stats.h2d_ms += (t1 - t0) * 1e3
-            stats.compute_ms += (t2 - t1) * 1e3
-            stats.merge_ms += (t3 - t2) * 1e3
+            emit_stage(tel, stats, "merge_ms", "fold", t2, t3, "main", a)
             stats.executed += 1
     return state, skipped, wasted

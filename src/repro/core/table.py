@@ -184,3 +184,9 @@ class Table:
 
     def encoding_of(self, name: str) -> str:
         return type(self.columns[name]).__name__
+
+    def encodings(self) -> Dict[str, str]:
+        """Chosen encoding per column, in schema order — the summary
+        ``Query.explain()`` renders per op, exposed table-wide for
+        notebooks and docs (``{'a': 'RLEColumn', 'qty': 'PlainColumn'}``)."""
+        return {name: self.encoding_of(name) for name in self.columns}

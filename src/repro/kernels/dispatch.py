@@ -18,7 +18,8 @@ Policy resolution, in order:
      ``REPRO_SEGSUM_MAX_GROUPS``, ``REPRO_PACK``, ``REPRO_PACK_MAX_BITS``,
      ``REPRO_UNPACK_MIN_VALS``, ``REPRO_PREFETCH_DEPTH``,
      ``REPRO_SERVE_BUDGET_BYTES``, ``REPRO_PLAN_CACHE_SIZE``,
-     ``REPRO_SERVE_MAX_BATCH`` — docs/KNOBS.md is the canonical table),
+     ``REPRO_SERVE_MAX_BATCH``, ``REPRO_TRACE``, ``REPRO_TRACE_BUFFER`` —
+     docs/KNOBS.md is the canonical table),
   3. defaults: Pallas on TPU backends only (interpret mode elsewhere is a
      correctness harness, not a fast path), size thresholds below which
      the fused XLA op wins regardless of backend.
@@ -116,6 +117,12 @@ class DispatchPolicy:
     serve_budget_bytes: Optional[int] = None
     plan_cache_size: int = 32
     serve_max_batch: int = 8
+    # telemetry (core/telemetry.py, DESIGN.md §14): span/trace recording.
+    # Off by default — every span site then costs one policy-field read;
+    # bench_stream CI-gates that the disabled path stays <2% of wall.
+    # ``trace_buffer_events`` bounds the event ring (oldest drop beyond).
+    enable_trace: bool = False
+    trace_buffer_events: int = 1 << 16
 
     def pallas_enabled(self) -> bool:
         if self.use_pallas is not None:
@@ -188,6 +195,9 @@ def policy_from_env(env=None) -> DispatchPolicy:
                                  base.plan_cache_size),
         serve_max_batch=_env_int(env, "REPRO_SERVE_MAX_BATCH",
                                  base.serve_max_batch),
+        enable_trace=bool(_env_tristate(env, "REPRO_TRACE")),
+        trace_buffer_events=_env_int(env, "REPRO_TRACE_BUFFER",
+                                     base.trace_buffer_events),
     )
 
 
@@ -220,6 +230,15 @@ def overrides(**kw):
 # ---------------------------------------------------------------------------
 
 
+def _route(primitive: str, path: str, reason: str) -> None:
+    if not _POLICY.enable_trace:
+        return
+    # lazy import, same layering reason as _is_packed: telemetry lives in
+    # core but reads this module's policy
+    from repro.core import telemetry
+    telemetry.record_route(primitive, path, reason)
+
+
 def _kernel_ok(*arrays) -> bool:
     return all(a.dtype in _KERNEL_DTYPES for a in arrays)
 
@@ -243,8 +262,15 @@ def unpack(packed) -> jax.Array:
     n, words = packed.nrows, packed.words
     if (pol.pallas_enabled() and n >= pol.unpack_min_vals
             and 0 < words.shape[0] <= MAX_VMEM_WORDS):
+        _route("unpack", "kernel",
+               f"n={n}>=unpack_min_vals={pol.unpack_min_vals}")
         return unpack_kernel(words, packed.bit_width, packed.offset, n,
                              interpret=pol.interpret_mode())
+    _route("unpack", "ref",
+           "pallas off" if not pol.pallas_enabled()
+           else f"n={n}<unpack_min_vals={pol.unpack_min_vals}"
+           if n < pol.unpack_min_vals
+           else f"words={words.shape[0]} outside (0, {MAX_VMEM_WORDS}]")
     return ref_mod.ref_unpack(words, packed.bit_width, packed.offset, n)
 
 
@@ -265,9 +291,14 @@ def bucketize(boundaries: jax.Array, queries, right: bool = True) -> jax.Array:
                 and n_b <= pol.bucketize_max_vmem_boundaries
                 and 0 < queries.words.shape[0] <= MAX_VMEM_WORDS
                 and _kernel_ok(boundaries)):
+            _route("bucketize", "kernel_packed_fused",
+                   f"n_q={n_q}>=bucketize_min_queries="
+                   f"{pol.bucketize_min_queries}")
             return bucketize_packed_kernel(
                 boundaries, queries.words, queries.bit_width, queries.offset,
                 n_q, right, interpret=pol.interpret_mode())
+        _route("bucketize", "ref_unpack_inline",
+               "packed queries below kernel thresholds")
         queries = ref_mod.ref_unpack(queries.words, queries.bit_width,
                                      queries.offset, n_q)
     n_b, n_q = boundaries.shape[0], queries.shape[0]
@@ -276,10 +307,20 @@ def bucketize(boundaries: jax.Array, queries, right: bool = True) -> jax.Array:
             and _kernel_ok(boundaries, queries)):
         interp = pol.interpret_mode()
         if n_b <= pol.bucketize_max_vmem_boundaries:
+            _route("bucketize", "kernel",
+                   f"n_q={n_q}>=bucketize_min_queries="
+                   f"{pol.bucketize_min_queries}, n_b={n_b} fits VMEM")
             return bucketize_kernel(boundaries, queries, right,
                                     interpret=interp)
+        _route("bucketize", "count_kernel",
+               f"n_b={n_b}>bucketize_max_vmem_boundaries="
+               f"{pol.bucketize_max_vmem_boundaries}")
         return bucketize_count_kernel(boundaries, queries, right,
                                       interpret=interp)
+    _route("bucketize", "xla",
+           "pallas off" if not pol.pallas_enabled()
+           else f"n_q={n_q}<bucketize_min_queries={pol.bucketize_min_queries}"
+           if n_q < pol.bucketize_min_queries else "dtype/empty boundaries")
     side = "right" if right else "left"
     return jnp.searchsorted(boundaries, queries, side=side).astype(jnp.int32)
 
@@ -298,16 +339,29 @@ def maybe_rle_decode(values, starts, ends, n, nrows: int, fill=0):
     pol = policy()
     if not (pol.pallas_enabled() and nrows >= pol.rle_decode_min_rows
             and starts.shape[0] > 0 and _kernel_ok(starts, ends)):
+        _route("rle_decode", "xla",
+               "pallas off" if not pol.pallas_enabled()
+               else f"nrows={nrows}<rle_decode_min_rows="
+               f"{pol.rle_decode_min_rows}"
+               if nrows < pol.rle_decode_min_rows else "dtype/empty runs")
         return None
     if _is_packed(values):
         if not (0 < values.words.shape[0] <= MAX_VMEM_WORDS):
+            _route("rle_decode", "xla",
+                   f"packed words={values.words.shape[0]} outside "
+                   f"(0, {MAX_VMEM_WORDS}]")
             return None
+        _route("rle_decode", "kernel_packed_fused",
+               f"nrows={nrows}>=rle_decode_min_rows={pol.rle_decode_min_rows}")
         return rle_decode_packed_kernel(
             values.words, values.bit_width, values.offset, starts.shape[0],
             starts, ends, jnp.asarray(n, jnp.int32), nrows, fill,
             interpret=pol.interpret_mode())
     if not _kernel_ok(values):
+        _route("rle_decode", "xla", f"value dtype {values.dtype} not routed")
         return None
+    _route("rle_decode", "kernel",
+           f"nrows={nrows}>=rle_decode_min_rows={pol.rle_decode_min_rows}")
     return rle_decode_kernel(values, starts, ends,
                              jnp.asarray(n, jnp.int32), nrows, fill,
                              interpret=pol.interpret_mode())
@@ -326,8 +380,17 @@ def segment_sum(values: jax.Array, segment_ids: jax.Array,
     if (pol.pallas_enabled() and values.dtype == jnp.float32
             and 0 < num_segments <= pol.segment_sum_max_groups
             and values.shape[0] > 0):
+        _route("segment_sum", "kernel",
+               f"G={num_segments}<=segment_sum_max_groups="
+               f"{pol.segment_sum_max_groups}")
         return segment_sum_kernel(values, segment_ids, num_segments,
                                   interpret=pol.interpret_mode())
+    _route("segment_sum", "xla_scatter",
+           "pallas off" if not pol.pallas_enabled()
+           else f"dtype {values.dtype} keeps exact scatter arithmetic"
+           if values.dtype != jnp.float32
+           else f"G={num_segments} outside "
+           f"(0, segment_sum_max_groups={pol.segment_sum_max_groups}]")
     return jnp.zeros((num_segments,), values.dtype).at[segment_ids].add(
         values, mode="drop")
 
@@ -344,5 +407,13 @@ def topk(values: jax.Array, k: int):
     if (pol.pallas_enabled() and values.shape[0] >= pol.topk_min_rows
             and 1 <= k <= min(pol.topk_max_k, MAX_KERNEL_K)
             and _kernel_ok(values)):
+        _route("topk", "kernel",
+               f"rows={values.shape[0]}>=topk_min_rows={pol.topk_min_rows}, "
+               f"k={k}<=topk_max_k={min(pol.topk_max_k, MAX_KERNEL_K)}")
         return topk_kernel(values, k, interpret=pol.interpret_mode())
+    _route("topk", "xla",
+           "pallas off" if not pol.pallas_enabled()
+           else f"rows={values.shape[0]}<topk_min_rows={pol.topk_min_rows}"
+           if values.shape[0] < pol.topk_min_rows
+           else f"k={k} outside kernel range")
     return jax.lax.top_k(values, k)

@@ -33,25 +33,20 @@ def rng():
 
 
 @pytest.fixture
-def transfer_counter(monkeypatch):
-    """Count host->device transfers by stubbing the module-global
-    ``partition.device_put`` (the streamed executor resolves it by name at
-    call time, so stubbing observes every ring transfer — including ranked
-    speculative prefetches that are later pruned without executing).
-    ``len(calls)`` is the transfer count; each entry is the HOST column
-    tree that was shipped, so tests can also assert WHICH partitions
-    transferred (identity of the leaves)."""
-    from repro.core import partition as P
+def transfer_counter():
+    """Count host->device transfers via the telemetry registry's H2D
+    listener hook (core/telemetry.py) — the same ``record_h2d`` call at
+    the executor's single ``device_put`` boundary that feeds the
+    always-on ``h2d_calls``/``h2d_bytes`` counters, so the test metric
+    and the engine's own accounting cannot diverge. The listener fires
+    for every ring transfer — including ranked speculative prefetches
+    that are later pruned without executing. ``len(calls)`` is the
+    transfer count; each entry is the HOST leaf list that was shipped."""
+    from repro.core import telemetry
 
     calls = []
-    real = P.device_put
-
-    def counting_device_put(tree):
-        calls.append(tree)
-        return real(tree)
-
-    monkeypatch.setattr(P, "device_put", counting_device_put)
-    return calls
+    with telemetry.h2d_listener(lambda nbytes, tree: calls.append(tree)):
+        yield calls
 
 
 # ---- host-side reference encoders (oracles build from dense arrays) --------
