@@ -23,6 +23,11 @@ pipeline must hide transfers behind):
 Emits ``artifacts/bench/BENCH_stream.json`` (``BENCH_stream_quick.json``
 under ``--quick`` via benchmarks.run).
 
+``chaos()`` is the companion fault-recovery pass (DESIGN.md §15): the
+same workload under a seeded FaultPlan, asserting bit-identical
+recovery at bounded cost — run by the CI ``chaos`` job, emitting
+``BENCH_faults.json`` + the ``TRACE_faults.json`` event timeline.
+
     PYTHONPATH=src python -m benchmarks.bench_stream
 """
 from __future__ import annotations
@@ -187,3 +192,106 @@ def run(n=2_000_000, num_partitions=16, out_name="BENCH_stream.json"):
 
 if __name__ == "__main__":
     run()
+
+
+def chaos(n=1_000_000, num_partitions=16, seed=11,
+          out_name="BENCH_faults.json", trace_name="TRACE_faults.json"):
+    """Seeded-fault recovery pass (DESIGN.md §15): the chaos CI gate.
+
+    Ingest-validates the table, then runs the streamed group-by query
+    under a SEEDED FaultPlan — 3 transient transfer faults + 1 device
+    OOM, each at attempt 0 of a distinct partition — and asserts the
+    recovery contract end to end:
+
+      * the result is BIT-IDENTICAL to the clean run (retry re-issues the
+        copy; depth degradation resumes the fold from the failed
+        partition with the accumulator intact);
+      * every injected fault is visible (3 retries, >=1 depth
+        degradation in ``last_stats`` and the always-on fault counters);
+      * recovery is cheap: faulted wall / clean wall <= 1.5 (CI-gated).
+
+    A second identically-seeded plan re-runs with tracing ON to export
+    the fault-event timeline (``TRACE_faults.json``: injections, retries
+    and degradations as instants on the dedicated ``fault`` track).
+    """
+    import time
+
+    from repro.core.faults import FaultPlan
+
+    rng = np.random.default_rng(7)
+    data = make_dict_heavy(rng, n)
+    cfg = compress.CompressionConfig(plain_threshold=1000)
+    pt = PartitionedTable.from_arrays(data, cfg=cfg,
+                                      num_partitions=num_partitions,
+                                      pack=True)
+    pt.validate()  # integrity gate: corrupted ingest fails the bench here
+    q = _query(pt)
+    q.run()  # trace + compile once; both timed passes below are warm
+
+    def payload(r):
+        ng = int(r.num_groups)
+        out = {f"k:{g}": np.asarray(r.keys[g])[:ng] for g in r.keys}
+        out.update({f"a:{o}": np.asarray(r.aggs[o])[:ng] for o in r.aggs})
+        return out
+
+    def timed():
+        t0 = time.perf_counter()
+        out = payload(q.run())
+        return out, (time.perf_counter() - t0) * 1e3
+
+    clean, clean_ms = min((timed() for _ in range(3)), key=lambda x: x[1])
+
+    plan = FaultPlan.seeded(seed, parts=num_partitions, transients=3,
+                            ooms=1, oom_site="compute")
+    with plan:
+        faulted, faulted_ms = timed()
+    st = dict(q.last_stats)
+    identical = (set(clean) == set(faulted)
+                 and all(np.array_equal(clean[k], faulted[k])
+                         for k in clean))
+    wall_ratio = faulted_ms / clean_ms
+
+    # identically-seeded second plan, tracing ON: capture the fault-event
+    # timeline (plan attempt counters are plan-scoped, so the same
+    # schedule re-fires here)
+    telemetry.reset()
+    with dispatch.overrides(enable_trace=True):
+        with FaultPlan.seeded(seed, parts=num_partitions, transients=3,
+                              ooms=1, oom_site="compute"):
+            q.run()
+    counters = {k: v for k, v in telemetry.registry().counters().items()
+                if k.startswith("fault.")}
+    os.makedirs(ART_DIR, exist_ok=True)
+    trace_path = telemetry.export_chrome_trace(
+        os.path.join(ART_DIR, trace_name))
+
+    report = {
+        "bench": "fault_recovery",
+        "backend": jax.default_backend(),
+        "rows": n,
+        "num_partitions": num_partitions,
+        "seed": seed,
+        "scheduled": [[f.site, f.part, f.attempt, f.kind]
+                      for f in plan.scheduled()],
+        "fired": len(plan.fired),
+        # CI-gated: recovery must be exact and visible
+        "identical": bool(identical),
+        "retries": st.get("retries", 0),
+        "degradations": st.get("degradations", 0),
+        "final_prefetch_depth": st.get("prefetch_depth", 0),
+        # CI-gated: recovery must be cheap (<= 1.5x the clean wall)
+        "clean_wall_ms": round(clean_ms, 3),
+        "faulted_wall_ms": round(faulted_ms, 3),
+        "wall_ratio": round(wall_ratio, 4),
+        "fault_counters": counters,
+        "trace": trace_path,
+    }
+    path = os.path.join(ART_DIR, out_name)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"[bench_stream.chaos] {len(plan.fired)} faults fired | "
+          f"identical={identical} | {report['retries']} retries, "
+          f"{report['degradations']} degradations | "
+          f"wall {clean_ms:.1f} -> {faulted_ms:.1f} ms "
+          f"({wall_ratio:.2f}x) -> {path}")
+    return report

@@ -30,6 +30,7 @@ def main(argv=None):
         "orderby": lambda: bench_orderby.run(n=300_000 if q else 10_000_000),
         "compress": lambda: bench_compress.run(n=300_000 if q else 2_000_000),
         "stream": lambda: bench_stream.run(n=300_000 if q else 2_000_000),
+        "faults": lambda: bench_stream.chaos(n=300_000 if q else 1_000_000),
         "serving": lambda: bench_serving.run(n=300_000 if q else 2_000_000),
         "primitives": lambda: bench_primitives.run(
             sizes=(10_000, 100_000, 500_000) if q else

@@ -14,10 +14,13 @@ Layers:
   order       — ORDER BY / TOP-K / LIMIT + distributed top-k merge (§10)
   serve       — concurrent query serving: plan cache, device-residency LRU,
                 shared scans, admission queue (DESIGN.md §13)
+  faults      — error taxonomy + deterministic fault injection; retry /
+                degradation / cancellation plumbing (DESIGN.md §15)
 """
 from repro.core import (
     arithmetic,
     compress,
+    faults,
     groupby,
     join,
     logical,
@@ -26,6 +29,14 @@ from repro.core import (
     plan,
     primitives,
     serve,
+)
+from repro.core.faults import (
+    DeviceOOMError,
+    FaultPlan,
+    QueryCancelled,
+    QueryDeadlineExceeded,
+    TransientTransferError,
+    ValidationError,
 )
 from repro.core.encodings import (
     IndexColumn,

@@ -517,3 +517,205 @@ def encoded_nbytes(col, unpacked: bool = False) -> int:
         return (encoded_nbytes(col.rle, unpacked)
                 + encoded_nbytes(col.idx, unpacked))
     raise TypeError(type(col))
+
+
+# ---------------------------------------------------------------------------
+# Integrity validation (DESIGN.md §15, Table.validate)
+# ---------------------------------------------------------------------------
+
+
+def unpack_array(words: np.ndarray, offset: int, bit_width: int,
+                 n: int) -> np.ndarray:
+    """Host-side inverse of ``pack_array``: int64 logical values.
+
+    The device unpack (kernels) is the hot path; this numpy twin exists so
+    ``validate_encoded`` can audit packed buffers without staging a
+    program — and so the two implementations cross-check each other in
+    the round-trip property tests.
+    """
+    b = int(bit_width)
+    out_words = np.asarray(words, np.uint32).astype(np.uint64)
+    if n == 0:
+        return np.zeros(0, np.int64)
+    bitpos = np.arange(int(n), dtype=np.int64) * b
+    w = bitpos >> 5
+    sh = (bitpos & 31).astype(np.uint64)
+    lo = out_words[w] >> sh
+    # straddling values continue into lane w+1; the shifted-in high bits
+    # land above bit 31 and are masked back down, so a lane that does not
+    # exist (the last value never straddles) is simply never read
+    nxt_ix = np.minimum(w + 1, len(out_words) - 1)
+    nxt = np.where(w + 1 < len(out_words), out_words[nxt_ix], np.uint64(0))
+    code = (lo | (nxt << (np.uint64(32) - sh))) & np.uint64((1 << b) - 1)
+    # logical = int32 wrap-add of code + offset (mirrors PackedColumn)
+    v = code.astype(np.int64) + int(offset)
+    return (((v + (1 << 31)) % (1 << 32)) - (1 << 31)).astype(np.int64)
+
+
+def _host_buf(buf) -> np.ndarray:
+    """Logical host copy of one encoded-column buffer slot: packed slots
+    decode through ``unpack_array`` (offset folded back in), raw slots
+    copy out as-is."""
+    if isinstance(buf, PackedColumn):
+        return unpack_array(np.asarray(buf.words), int(buf.offset),
+                            buf.bit_width, int(buf.nrows))
+    return np.asarray(buf)
+
+
+def _vfail(name: str, msg: str):
+    from repro.core.faults import ValidationError
+
+    raise ValidationError(f"column {name!r}: {msg}")
+
+
+def _check_packed_width(buf, name: str, what: str, lo_req: int,
+                        hi_req: int) -> None:
+    """A packed buffer must be able to represent [lo_req, hi_req] exactly
+    — a too-narrow width silently aliases values modulo 2**b, which is
+    precisely the corruption class this validator exists to catch."""
+    if not isinstance(buf, PackedColumn) or buf.bit_width >= 32:
+        return  # width 32 is an exact modular passthrough
+    lo = int(buf.offset)
+    hi = lo + (1 << buf.bit_width) - 1
+    if int(lo_req) < lo or int(hi_req) > hi:
+        _vfail(name, f"{what} packed at {buf.bit_width} bits from offset "
+                     f"{lo} cannot represent required range "
+                     f"[{int(lo_req)}, {int(hi_req)}]")
+
+
+def _check_runs(name: str, starts, ends, n: int, nrows: int) -> None:
+    """RLE structural invariants: ``n`` in capacity, valid runs sorted,
+    disjoint and inside [0, nrows), sentinel tail == nrows."""
+    s = _host_buf(starts).astype(np.int64)
+    e = _host_buf(ends).astype(np.int64)
+    cap = s.shape[0]
+    if e.shape[0] != cap:
+        _vfail(name, f"starts/ends capacity mismatch ({cap} vs {e.shape[0]})")
+    if not (0 <= n <= cap):
+        _vfail(name, f"run count n={n} outside capacity {cap}")
+    vs, ve = s[:n], e[:n]
+    if n:
+        if vs[0] < 0 or int(ve.max()) >= nrows:
+            _vfail(name, f"runs escape [0, {nrows})")
+        if (ve < vs).any():
+            _vfail(name, "run end precedes start")
+        if n > 1 and (vs[1:] <= ve[:-1]).any():
+            _vfail(name, "runs overlap or are not sorted")
+    if (s[n:] != nrows).any() or (e[n:] != nrows).any():
+        _vfail(name, f"run sentinel tail != nrows ({nrows})")
+
+
+def _check_positions(name: str, positions, n: int, nrows: int) -> None:
+    """Index structural invariants: strictly increasing valid positions
+    inside [0, nrows), sentinel tail == nrows."""
+    p = _host_buf(positions).astype(np.int64)
+    cap = p.shape[0]
+    if not (0 <= n <= cap):
+        _vfail(name, f"position count n={n} outside capacity {cap}")
+    vp = p[:n]
+    if n:
+        if vp[0] < 0 or int(vp.max()) >= nrows:
+            _vfail(name, f"positions escape [0, {nrows})")
+        if n > 1 and (np.diff(vp) <= 0).any():
+            _vfail(name, "positions not strictly increasing")
+    if (p[n:] != nrows).any():
+        _vfail(name, f"position sentinel tail != nrows ({nrows})")
+
+
+def _widened(domain: Optional[Tuple[int, int]]) -> Optional[Tuple[int, int]]:
+    """RLE/Index value buffers hold literal zeros in capacity padding, so
+    their packed range is the domain widened to include 0."""
+    if domain is None:
+        return None
+    lo, size = int(domain[0]), int(domain[1])
+    return min(lo, 0), max(lo + size - 1, 0)
+
+
+def validate_encoded(col, name: str, nrows: int, dictionary=None,
+                     domain: Optional[Tuple[int, int]] = None,
+                     rows: Optional[int] = None) -> np.ndarray:
+    """Integrity-check one encoded column; returns its decoded host copy.
+
+    Structural: RLE run lists sorted/disjoint/in-bounds with the sentinel
+    tail intact; Index position lists strictly increasing with sentinels;
+    RLE+Index runs and outlier positions disjoint. Packed: every
+    bit-packed buffer wide enough for its required range (positions/
+    starts/ends must represent the sentinel ``nrows``; value buffers the
+    recorded domain widened to include padding zeros). Semantic:
+    dictionary codes inside the dictionary, decoded values inside the
+    recorded domain. ``rows`` restricts the semantic checks to the real
+    (unpadded) prefix — partition padding replicates the last real row.
+
+    Raises ``faults.ValidationError`` on the first violated invariant.
+    """
+    from repro.core.encodings import decode_column
+
+    def check(c, what: str, dom) -> None:
+        if isinstance(c, PlainColumn):
+            vals = _host_buf(c.values)
+            if vals.shape[0] != nrows:
+                _vfail(name, f"{what} length {vals.shape[0]} != nrows "
+                             f"{nrows}")
+            if dom is not None:
+                lo, size = int(dom[0]), int(dom[1])
+                _check_packed_width(c.values, name, what, lo, lo + size - 1)
+        elif isinstance(c, RLEColumn):
+            _check_runs(name, c.starts, c.ends, int(c.n), nrows)
+            _check_packed_width(c.starts, name, f"{what} starts", 0, nrows)
+            _check_packed_width(c.ends, name, f"{what} ends", 0, nrows)
+            wd = _widened(dom)
+            if wd is not None:
+                _check_packed_width(c.values, name, f"{what} values",
+                                    wd[0], wd[1])
+        elif isinstance(c, IndexColumn):
+            _check_positions(name, c.positions, int(c.n), nrows)
+            _check_packed_width(c.positions, name, f"{what} positions",
+                                0, nrows)
+            wd = _widened(dom)
+            if wd is not None:
+                _check_packed_width(c.values, name, f"{what} values",
+                                    wd[0], wd[1])
+        elif isinstance(c, PlainIndexColumn):
+            base = _host_buf(c.base.values)
+            if base.shape[0] != nrows:
+                _vfail(name, f"{what} base length {base.shape[0]} != "
+                             f"nrows {nrows}")
+            # base and outlier buffers pack at BUFFER-derived ranges (the
+            # inlier/outlier split, never the column domain — pack_encoded):
+            # only the outlier index structure is width-checkable
+            check(c.outliers, f"{what} outliers", None)
+        elif isinstance(c, RLEIndexColumn):
+            check(c.rle, f"{what} rle", dom)
+            check(c.idx, f"{what} idx", dom)
+            # runs and outlier positions must partition the row space
+            # disjointly: a row covered by both has two values
+            nr, ni = int(c.rle.n), int(c.idx.n)
+            if nr and ni:
+                vs = _host_buf(c.rle.starts).astype(np.int64)[:nr]
+                ve = _host_buf(c.rle.ends).astype(np.int64)[:nr]
+                vp = _host_buf(c.idx.positions).astype(np.int64)[:ni]
+                j = np.searchsorted(vs, vp, side="right") - 1
+                inside = (j >= 0) & (vp <= ve[np.maximum(j, 0)])
+                if inside.any():
+                    p = int(vp[inside][0])
+                    _vfail(name, f"{what}: position {p} falls inside an "
+                                 "RLE run (runs and outliers overlap)")
+        else:
+            _vfail(name, f"unknown column type {type(c).__name__}")
+
+    check(col, "values", domain)
+    decoded = np.asarray(decode_column(col))
+    k = nrows if rows is None else min(int(rows), nrows)
+    body = decoded[:k]
+    if k and dictionary is not None:
+        lo, hi = int(body.min()), int(body.max())
+        if lo < 0 or hi >= len(dictionary):
+            _vfail(name, f"dictionary codes [{lo}, {hi}] escape the "
+                         f"{len(dictionary)}-entry dictionary")
+    if k and domain is not None and decoded.dtype.kind in "iu":
+        lo, size = int(domain[0]), int(domain[1])
+        blo, bhi = int(body.min()), int(body.max())
+        if blo < lo or bhi >= lo + size:
+            _vfail(name, f"decoded values [{blo}, {bhi}] escape the "
+                         f"recorded domain [{lo}, {lo + size})")
+    return decoded

@@ -261,6 +261,51 @@ class PartitionedTable:
 
     # -- inspection ----------------------------------------------------------
 
+    def validate(self) -> "PartitionedTable":
+        """Integrity-check every partition (DESIGN.md §15).
+
+        Per column per partition: the ``Table``-level structural, packed
+        bit-width, dictionary and domain invariants
+        (``compress.validate_encoded``, restricted to the real-row prefix
+        — padding replicates the last real row), PLUS the partition-only
+        invariants the skip decisions depend on: zone maps must equal the
+        actual min/max of the real rows (a stale zone map silently skips
+        partitions that match), and ``row_offset`` coverage must tile
+        [0, nrows) contiguously. Raises ``faults.ValidationError``."""
+        from repro.core.faults import ValidationError
+
+        offset = 0
+        for i, p in enumerate(self.partitions):
+            if p.row_offset != offset:
+                raise ValidationError(
+                    f"partition {i}: row_offset {p.row_offset} != expected "
+                    f"{offset} (partitions must tile [0, nrows))")
+            offset += p.rows
+            for name, col in p.table.columns.items():
+                decoded = compress.validate_encoded(
+                    col, f"partition {i}:{name}", p.padded_rows,
+                    dictionary=self.dictionaries.get(name),
+                    domain=p.table.domains.get(name),
+                    rows=p.rows)
+                if not p.rows:
+                    continue
+                zlo = p.zone_lo.get(name)
+                zhi = p.zone_hi.get(name)
+                if (zlo is None or not np.isfinite(zlo)
+                        or not np.isfinite(zhi)):
+                    continue  # unbounded (NaN-poisoned) zones prune nothing
+                body = decoded[:p.rows]
+                lo, hi = float(body.min()), float(body.max())
+                if lo != float(zlo) or hi != float(zhi):
+                    raise ValidationError(
+                        f"partition {i} column {name!r}: zone map "
+                        f"[{zlo}, {zhi}] != actual [{lo}, {hi}]")
+        if offset != self.nrows:
+            raise ValidationError(
+                f"partitions cover {offset} rows, table declares "
+                f"{self.nrows}")
+        return self
+
     def decode(self, name: str) -> np.ndarray:
         """Materialize a column across partitions (tests / inspection)."""
         chunks = [np.asarray(p.table.decode(name))[:p.rows]
@@ -711,6 +756,8 @@ class PartitionedQuery(Query):
             "compute_ms": st.get("compute_ms", 0.0),
             "merge_ms": st.get("merge_ms", 0.0),
             "prefetch_depth": st.get("prefetch_depth", 0),
+            "retries": st.get("retries", 0),
+            "degradations": st.get("degradations", 0),
             "trace_count": self.trace_count,
             "qid": self.qid,
         }
@@ -734,6 +781,13 @@ class PartitionedQuery(Query):
         lines.append(
             f"  stage ms: h2d {a['h2d_ms']:.3f} | compute "
             f"{a['compute_ms']:.3f} | merge {a['merge_ms']:.3f}")
+        if a["retries"] or a["degradations"]:
+            lines.append(
+                f"  resilience: {a['retries']} transfer "
+                f"retr{'ies' if a['retries'] != 1 else 'y'}, "
+                f"{a['degradations']} depth degradation"
+                f"{'s' if a['degradations'] != 1 else ''} "
+                f"(final depth {a['prefetch_depth']})")
         return "\n".join(lines)
 
     def run(self, jit: bool = True):
@@ -793,11 +847,15 @@ class PartitionedQuery(Query):
                 return plan_mod.fold_scalar_partial(acc, partial,
                                                     partial_specs)
 
-            acc = stream.pipelined_fold(todo, transfer, compute, fold, None,
-                                        depth, stats,
-                                        nbytes_of=Partition.nbytes,
-                                        label_of=label_of)
-            self.last_stats.update(stats.as_dict())
+            try:
+                acc = stream.pipelined_fold(todo, transfer, compute, fold,
+                                            None, depth, stats,
+                                            nbytes_of=Partition.nbytes,
+                                            label_of=label_of)
+            finally:
+                # terminal errors still report the partial pipeline stats
+                # (stage ms, retries, degradations — DESIGN.md §15)
+                self.last_stats.update(stats.as_dict())
             return plan_mod.finalize_scalar_partials(
                 acc, terminal.specs, col_dtypes=ptable.col_dtypes)
 
@@ -808,10 +866,13 @@ class PartitionedQuery(Query):
             return groupby.fold_groupby_partial(acc, partial, group_names,
                                                 partial_specs)
 
-        acc = stream.pipelined_fold(todo, transfer, compute, fold, None,
-                                    depth, stats, nbytes_of=Partition.nbytes,
-                                    label_of=label_of)
-        self.last_stats.update(stats.as_dict())
+        try:
+            acc = stream.pipelined_fold(todo, transfer, compute, fold, None,
+                                        depth, stats,
+                                        nbytes_of=Partition.nbytes,
+                                        label_of=label_of)
+        finally:
+            self.last_stats.update(stats.as_dict())
         merged = groupby.finalize_groupby_partials(acc, group_names,
                                                    terminal.specs)
         if oop is not None:
@@ -883,9 +944,14 @@ class PartitionedQuery(Query):
             return order_mod.merge_ranked_partials(
                 state, block, oop.by, oop.descending, oop.limit)
 
-        state, ranked_skipped, wasted = stream.pipelined_ranked_fold(
-            items, transfer, compute, fold, prune, depth, stats,
-            nbytes_of=Partition.nbytes, label_of=label_of)
+        try:
+            state, ranked_skipped, wasted = stream.pipelined_ranked_fold(
+                items, transfer, compute, fold, prune, depth, stats,
+                nbytes_of=Partition.nbytes, label_of=label_of)
+        except BaseException:
+            # failed ranked runs still report partial pipeline stats
+            self.last_stats.update(stats.as_dict())
+            raise
         # coherent stats invariant: partitions == executed + skipped
         # + ranked_skipped. The seed overwrote ``executed`` here while
         # ``skipped`` kept only the zone-map count, leaving readers to

@@ -46,6 +46,21 @@ serving window, p50/p99/mean latency, plan-cache and residency hit rates,
 and the scan-sharing split. Knobs: ``DispatchPolicy.serve_budget_bytes`` /
 ``plan_cache_size`` / ``serve_max_batch`` (env ``REPRO_SERVE_BUDGET_BYTES``
 / ``REPRO_PLAN_CACHE_SIZE`` / ``REPRO_SERVE_MAX_BATCH`` — docs/KNOBS.md).
+
+Fault tolerance (DESIGN.md §15): ``submit(deadline_s=)`` bounds a query's
+end-to-end latency, ``cancel(ticket)`` requests cooperative cancellation
+— both take effect at partition boundaries (the query stops between
+partitions, never mid-program), and a still-queued ticket is reaped at
+the next batch formation. ``result(timeout=)`` removes a still-queued
+ticket on expiry instead of leaving it to run for a caller that gave up.
+Failure is isolated per subscriber: a query whose program or fold raises
+mid-shared-scan fails only its own ticket; the co-batched queries finish
+normally. A ``DeviceOOMError`` that survives the streamed executor's own
+depth degradation evicts the residency LRU and re-runs each subscriber
+in its own pass before failing anything. ``close(drain=False)`` cancels
+the queue instead of executing it, and ``recover()`` clears a ``_fatal``
+invariant violation (fresh plan cache, restarted drain thread) so one
+poisoned plan does not wedge the server forever.
 """
 from __future__ import annotations
 
@@ -58,11 +73,16 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.core import groupby
+from repro.core import faults, groupby
 from repro.core import order as order_mod
 from repro.core import plan as plan_mod
 from repro.core import stream
 from repro.core import telemetry
+from repro.core.faults import (
+    DeviceOOMError,
+    QueryCancelled,
+    QueryDeadlineExceeded,
+)
 from repro.core.partition import (
     Partition,
     PartitionedQuery,
@@ -217,6 +237,9 @@ class Ticket:
     plan_hit: bool = False
     shared_with: int = 0  # co-batched queries in this ticket's scan pass
     latency_ms: float = 0.0
+    deadline: Optional[float] = None  # absolute perf_counter budget
+    cancel_requested: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
 
 
 class _Prepped:
@@ -320,13 +343,21 @@ class QueryServer:
         self._scan_passes = 0
         self._shared_queries = 0
         self._solo_queries = 0
+        self._timeouts = 0  # result(timeout=) expiries
+        self._cancelled = 0  # tickets failed with QueryCancelled
+        self._expired = 0  # tickets failed with QueryDeadlineExceeded
+        self._oom_fallbacks = 0  # LRU-evicting OOM fallbacks (§15)
         self._fatal: Optional[BaseException] = None  # invariant violation
+        self._started = start
         self._worker: Optional[threading.Thread] = None
         if start:
-            self._worker = threading.Thread(target=self._drain,
-                                            name="repro-serve-drain",
-                                            daemon=True)
-            self._worker.start()
+            self._worker = self._spawn_worker()
+
+    def _spawn_worker(self) -> threading.Thread:
+        worker = threading.Thread(target=self._drain,
+                                  name="repro-serve-drain", daemon=True)
+        worker.start()
+        return worker
 
     # -- submission ---------------------------------------------------------
 
@@ -334,7 +365,14 @@ class QueryServer:
         """A fresh ``PartitionedQuery`` staged against the served table."""
         return PartitionedQuery(self.table)
 
-    def submit(self, query: PartitionedQuery) -> Ticket:
+    def submit(self, query: PartitionedQuery,
+               deadline_s: Optional[float] = None) -> Ticket:
+        """Enqueue ``query``; returns immediately with a ``Ticket``.
+
+        ``deadline_s`` bounds the query's END-TO-END latency (queue wait
+        included): past it the ticket fails with
+        ``QueryDeadlineExceeded`` at the next partition boundary or batch
+        formation, whichever comes first."""
         if query.table is not self.table:
             raise ValueError("query was staged against a different table "
                              "than this server holds resident")
@@ -348,13 +386,14 @@ class QueryServer:
             i for i, p in enumerate(self.table.partitions)
             if partition_can_match(p, query.ops, self.table))
         now = time.perf_counter()
+        deadline = now + float(deadline_s) if deadline_s is not None else None
         with self._cv:
             if self._fatal is not None:
                 raise self._fatal
             if self._closed:
                 raise RuntimeError("QueryServer is closed")
             ticket = Ticket(qid=self._next_qid, query=query, submitted=now,
-                            part_ids=pids)
+                            part_ids=pids, deadline=deadline)
             self._next_qid += 1
             self._queue.append(ticket)
             self._cv.notify()
@@ -363,8 +402,48 @@ class QueryServer:
                 self._first_submit = now
         return ticket
 
+    def cancel(self, ticket: Ticket) -> bool:
+        """Request cooperative cancellation of ``ticket``.
+
+        A still-queued ticket is dequeued and failed with
+        ``QueryCancelled`` immediately; a running one stops at its next
+        partition boundary. Returns False when the ticket had already
+        finished (its result/error stands)."""
+        if ticket.done.is_set():
+            return False
+        ticket.cancel_requested.set()
+        removed = False
+        with self._cv:
+            try:
+                self._queue.remove(ticket)
+                removed = True
+            except ValueError:
+                pass  # running (or finishing): the flag does the work
+        if removed:
+            self._finish(ticket, error=QueryCancelled(
+                f"query {ticket.qid} cancelled while queued"))
+        return True
+
     def result(self, ticket: Ticket, timeout: Optional[float] = None):
         if not ticket.done.wait(timeout):
+            with self._stats_lock:
+                self._timeouts += 1
+            telemetry.record_fault("serve_timeout", ticket=ticket.qid,
+                                   timeout_s=timeout)
+            # a still-QUEUED ticket is reaped here: its caller gave up,
+            # so leaving it to run (the pre-§15 behavior) only burned
+            # device time and wedged close(); a RUNNING one finishes
+            removed = False
+            with self._cv:
+                try:
+                    self._queue.remove(ticket)
+                    removed = True
+                except ValueError:
+                    pass
+            if removed:
+                self._finish(ticket, error=QueryCancelled(
+                    f"query {ticket.qid} dequeued: result(timeout="
+                    f"{timeout}) expired before it was admitted"))
             if self._fatal is not None:  # the drain thread died on it
                 raise self._fatal
             raise TimeoutError(f"query {ticket.qid} still queued/running "
@@ -373,6 +452,22 @@ class QueryServer:
             raise ticket.error
         return ticket.result
 
+    def _cancel_error(self, ticket: Ticket,
+                      now: Optional[float] = None) -> Optional[BaseException]:
+        """The error ``ticket`` should fail with right now, or None.
+
+        Probed at every cooperative cancellation point: batch formation,
+        each shared-scan partition boundary, and the solo path's transfer
+        boundary."""
+        if ticket.cancel_requested.is_set():
+            return QueryCancelled(f"query {ticket.qid} cancelled")
+        if ticket.deadline is not None:
+            if (time.perf_counter() if now is None else now) >= ticket.deadline:
+                return QueryDeadlineExceeded(
+                    f"query {ticket.qid} exceeded its "
+                    f"{(ticket.deadline - ticket.submitted):.3f}s deadline")
+        return None
+
     # -- admission / drain loop --------------------------------------------
 
     def _part_nbytes(self, pids) -> int:
@@ -380,36 +475,67 @@ class QueryServer:
         return sum(parts[i].nbytes() for i in pids)
 
     def _next_batch(self, block: bool) -> Optional[List[Ticket]]:
-        with self._cv:
-            if block:
-                while not self._queue and not self._closed:
-                    self._cv.wait()
-            if not self._queue:
+        while True:
+            reaped: List[Tuple[Ticket, BaseException]] = []
+            batch: Optional[List[Ticket]] = None
+            with self._cv:
+                if block:
+                    while not self._queue and not self._closed:
+                        self._cv.wait()
+                # reap cancelled / deadline-expired tickets BEFORE they
+                # cost a batch slot — a dead ticket never reaches a scan
+                now = time.perf_counter()
+                keep: "deque[Ticket]" = deque()
+                for t in self._queue:
+                    err = self._cancel_error(t, now)
+                    if err is not None:
+                        reaped.append((t, err))
+                    else:
+                        keep.append(t)
+                self._queue = keep
+                if self._queue:
+                    batch = [self._queue.popleft()]
+                    union = set(batch[0].part_ids)
+                    union_bytes = self._part_nbytes(union)
+                    # FIFO budget admission: the head always runs;
+                    # followers join while the batch stays within
+                    # max_batch and the union of zone-map partition sets
+                    # stays within the device budget
+                    while self._queue and len(batch) < self.max_batch:
+                        nxt = self._queue[0]
+                        fresh = nxt.part_ids - union
+                        fresh_bytes = self._part_nbytes(fresh)
+                        if (self.budget_bytes is not None
+                                and union_bytes + fresh_bytes
+                                > self.budget_bytes):
+                            break
+                        union |= fresh
+                        union_bytes += fresh_bytes
+                        batch.append(self._queue.popleft())
+                closed = self._closed
+            for t, err in reaped:  # outside the lock: _finish takes others
+                self._finish(t, error=err)
+            if batch is not None:
+                return batch
+            if not block or closed:
                 return None
-            batch = [self._queue.popleft()]
-            union = set(batch[0].part_ids)
-            union_bytes = self._part_nbytes(union)
-            # FIFO budget admission: the head always runs; followers join
-            # while the batch stays within max_batch and the union of
-            # zone-map partition sets stays within the device budget
-            while self._queue and len(batch) < self.max_batch:
-                nxt = self._queue[0]
-                fresh = nxt.part_ids - union
-                fresh_bytes = self._part_nbytes(fresh)
-                if (self.budget_bytes is not None
-                        and union_bytes + fresh_bytes > self.budget_bytes):
-                    break
-                union |= fresh
-                union_bytes += fresh_bytes
-                batch.append(self._queue.popleft())
-            return batch
+            # reaping emptied the queue: go back to waiting
 
     def _drain(self) -> None:
         while True:
             batch = self._next_batch(block=True)
             if batch is None:  # closed and fully drained
                 return
-            self._execute_batch(batch)
+            try:
+                self._execute_batch(batch)
+            except BaseException as exc:  # noqa: BLE001 - invariant death
+                # only the zero-retrace violation raises out of
+                # _execute_batch; park it in _fatal (submit/result raise
+                # it, recover() clears it) instead of dying silently
+                with self._cv:
+                    if self._fatal is None:
+                        self._fatal = exc
+                return
 
     def step(self) -> int:
         """Synchronously execute the next admitted batch (``start=False``
@@ -502,8 +628,23 @@ class QueryServer:
         for it in items:
             it.entry.warm = True
 
-    def _shared_scan(self, items: List[_Prepped]) -> None:
+    def _shared_scan(self, items: List[_Prepped],
+                     _oom_retry: bool = False) -> None:
         from repro.kernels import dispatch
+
+        # failure isolation: a subscriber whose program/fold raises (or
+        # whose deadline expires / cancel lands) drops into `dead` and is
+        # finished with ITS error; the shared pass carries on for the rest
+        dead: set = set()
+
+        def reap(i: int, exc: BaseException) -> None:
+            dead.add(i)
+            self._finish(items[i].ticket, error=exc)
+
+        for idx, it in enumerate(items):
+            err = self._cancel_error(it.ticket)
+            if err is not None:
+                reap(idx, err)
 
         # one streamed pass over the zone-map union, partition order =
         # table order, so each query's partials fold exactly as its solo
@@ -511,6 +652,8 @@ class QueryServer:
         union: "OrderedDict[int, Partition]" = OrderedDict()
         need: Dict[int, List[int]] = {}
         for idx, it in enumerate(items):
+            if idx in dead:
+                continue
             for pid, part in it.todo:
                 need.setdefault(pid, []).append(idx)
                 union[pid] = part
@@ -531,12 +674,29 @@ class QueryServer:
             pid, part = part_item
             tree, was_hit = fetched
             partials = {}
-            payer = need[pid][0]  # a miss is attributed to its first taker
-            for i in need[pid]:
+            takers = [i for i in need[pid] if i not in dead]
+            # partition boundary = cooperative cancellation point
+            for i in list(takers):
+                err = self._cancel_error(items[i].ticket)
+                if err is not None:
+                    reap(i, err)
+                    takers.remove(i)
+            payer = takers[0] if takers else None  # miss -> first taker
+            for i in takers:
                 st = items[i].stats
                 t0 = time.perf_counter()
-                partials[i] = items[i].entry.program(
-                    tree, items[i].key_sets, part.rows)
+                try:
+                    faults.maybe_inject("program", pid)
+                    partials[i] = items[i].entry.program(
+                        tree, items[i].key_sets, part.rows)
+                except DeviceOOMError:
+                    raise  # allocator pressure is pass-level, not per-query
+                except BaseException as exc:  # noqa: BLE001 - isolate
+                    telemetry.record_fault("serve_isolated",
+                                           qid=st.qid, part=pid,
+                                           error=type(exc).__name__)
+                    reap(i, exc)
+                    continue
                 t1 = time.perf_counter()
                 st.executed += 1
                 if was_hit:
@@ -560,22 +720,49 @@ class QueryServer:
         def fold(accs, part_item, partials):
             pid = part_item[0]
             for i, partial in partials.items():
+                if i in dead:
+                    continue
                 st = items[i].stats
                 t0 = time.perf_counter()
-                accs[i] = items[i].fold(accs[i], partial)
+                try:
+                    accs[i] = items[i].fold(accs[i], partial)
+                except BaseException as exc:  # noqa: BLE001 - isolate
+                    reap(i, exc)
+                    continue
                 stream.emit_stage(tel, st, "merge_ms", "serve.fold",
                                   t0, time.perf_counter(), "main",
                                   {"part": pid})
             return accs
 
-        with telemetry.span("serve.batch", "main",
-                            queries=len(items), partitions=len(scan),
-                            qids=[it.stats.qid for it in items]):
-            accs = stream.pipelined_fold(
-                scan, transfer, compute, fold,
-                {i: None for i in range(len(items))},
-                depth, pass_stats, nbytes_of=lambda pi: pi[1].nbytes(),
-                label_of=lambda pi: pi[0])
+        try:
+            with telemetry.span("serve.batch", "main",
+                                queries=len(items), partitions=len(scan),
+                                qids=[it.stats.qid for it in items]):
+                accs = stream.pipelined_fold(
+                    scan, transfer, compute, fold,
+                    {i: None for i in range(len(items))},
+                    depth, pass_stats, nbytes_of=lambda pi: pi[1].nbytes(),
+                    label_of=lambda pi: pi[0])
+        except DeviceOOMError as exc:
+            # the streamed executor already degraded its depth to 0 and
+            # STILL hit allocator exhaustion: shed the server's own
+            # pressure (evict every resident partition) and split the
+            # batch — each surviving subscriber re-runs in its own pass,
+            # so co-batched queries stop competing for device memory
+            telemetry.record_fault("serve_oom", queries=len(items),
+                                   resident_bytes=self.lru.resident_bytes)
+            with self._stats_lock:
+                self._oom_fallbacks += 1
+            self.lru.clear()
+            alive = [it for idx, it in enumerate(items)
+                     if idx not in dead and not it.ticket.done.is_set()]
+            if _oom_retry or len(alive) <= 1:
+                for it in alive:
+                    self._finish(it.ticket, error=exc)
+                return
+            for it in alive:
+                self._shared_scan([it], _oom_retry=True)
+            return
         with self._stats_lock:
             self._scan_passes += 1
             if len(items) > 1:
@@ -583,6 +770,8 @@ class QueryServer:
             else:
                 self._solo_queries += 1
         for idx, it in enumerate(items):
+            if idx in dead or it.ticket.done.is_set():
+                continue
             try:
                 result = it.finalize(accs[idx])
             except BaseException as exc:  # noqa: BLE001
@@ -591,8 +780,15 @@ class QueryServer:
             it.ticket.shared_with = len(items) - 1
             st = it.stats.as_dict()
             st["executed"] = it.stats.executed
-            st["skipped"] = len(self.table.partitions) - it.stats.executed
+            st["skipped"] = max(
+                len(self.table.partitions) - it.stats.executed, 0)
             st["h2d_ms"] = round(pass_stats.h2d_ms, 3)  # pass-level wait
+            # resilience is a property of the PASS (retries and depth
+            # degradations happen in the shared ring), surfaced to every
+            # subscriber so any one ticket's stats tell the whole story
+            st["retries"] = pass_stats.retries
+            st["degradations"] = pass_stats.degradations
+            st["prefetch_depth"] = pass_stats.prefetch_depth
             self._finish(it.ticket, result=result, stats=st)
 
     def _run_solo(self, item: _Prepped) -> None:
@@ -600,12 +796,35 @@ class QueryServer:
         (§10) — runs alone, but through the residency LRU and its cached
         non-donating program."""
         q = item.ticket.query
+        err = self._cancel_error(item.ticket)
+        if err is not None:
+            self._finish(item.ticket, error=err)
+            return
         hits0 = self.lru.hits
-        q._transfer_fn = lambda part: self.lru.fetch(
-            self._pid_of[id(part)], part)[0]
+
+        def fetch(part):
+            # the streamed executor calls this once per surviving
+            # partition: a cooperative cancellation point for solo runs
+            cerr = self._cancel_error(item.ticket)
+            if cerr is not None:
+                raise cerr
+            return self.lru.fetch(self._pid_of[id(part)], part)[0]
+
+        q._transfer_fn = fetch
         q._program_override = item.entry.program
         try:
-            result = q.run(jit=True)
+            try:
+                result = q.run(jit=True)
+            except DeviceOOMError:
+                # mirror the shared pass: shed residency pressure once,
+                # then retry with a cold LRU before failing the ticket
+                telemetry.record_fault(
+                    "serve_oom", qid=q.qid,
+                    resident_bytes=self.lru.resident_bytes)
+                with self._stats_lock:
+                    self._oom_fallbacks += 1
+                self.lru.clear()
+                result = q.run(jit=True)
         except BaseException as exc:  # noqa: BLE001
             self._finish(item.ticket, error=exc)
             return
@@ -623,6 +842,8 @@ class QueryServer:
 
     def _finish(self, ticket: Ticket, result=None, error=None,
                 stats=None) -> None:
+        if ticket.done.is_set():
+            return  # cancel()/result(timeout) raced the drain: first wins
         now = time.perf_counter()
         ticket.result = result
         ticket.error = error
@@ -633,8 +854,16 @@ class QueryServer:
             if error is None:
                 self._completed += 1
                 self._latencies_ms.append(ticket.latency_ms)
+            elif isinstance(error, QueryDeadlineExceeded):
+                self._expired += 1
+            elif isinstance(error, QueryCancelled):
+                self._cancelled += 1
             else:
                 self._errors += 1
+        if isinstance(error, QueryDeadlineExceeded):
+            telemetry.record_fault("serve_deadline", ticket=ticket.qid)
+        elif isinstance(error, QueryCancelled):
+            telemetry.record_fault("serve_cancel", ticket=ticket.qid)
         ticket.done.set()
 
     # -- observability / lifecycle -----------------------------------------
@@ -650,11 +879,19 @@ class QueryServer:
             passes = self._scan_passes
             shared_q = self._shared_queries
             solo_q = self._solo_queries
+            timeouts = self._timeouts
+            cancelled = self._cancelled
+            expired = self._expired
+            oom_fallbacks = self._oom_fallbacks
         plan_total = self.plans.hits + self.plans.misses
         res_total = self.lru.hits + self.lru.misses
         return {
             "completed": completed,
             "errors": errors,
+            "timeouts": timeouts,
+            "cancelled": cancelled,
+            "expired": expired,
+            "oom_fallbacks": oom_fallbacks,
             "qps": round(completed / window, 3) if window > 0 else 0.0,
             "p50_ms": round(float(np.percentile(lats, 50)), 3) if lats.size else 0.0,
             "p99_ms": round(float(np.percentile(lats, 99)), 3) if lats.size else 0.0,
@@ -684,18 +921,64 @@ class QueryServer:
             },
         }
 
-    def close(self) -> None:
-        """Drain the queue, stop the worker, release resident buffers."""
+    def close(self, drain: bool = True) -> None:
+        """Stop the server and release resident buffers.
+
+        ``drain=True`` (default) EXECUTES everything already queued
+        before stopping — submitted work is never silently discarded.
+        ``drain=False`` cancels the queue instead (each queued ticket
+        fails with ``QueryCancelled``; waiters unblock immediately): the
+        shutdown path for a server whose queue is no longer worth
+        serving. Either way the in-flight batch, if any, finishes."""
+        dropped: List[Ticket] = []
         with self._cv:
             self._closed = True
+            if not drain:
+                dropped = list(self._queue)
+                self._queue.clear()
             self._cv.notify_all()
+        for t in dropped:
+            self._finish(t, error=QueryCancelled(
+                f"query {t.qid} cancelled: server closed with drain=False"))
         if self._worker is not None:
             self._worker.join()
             self._worker = None
         else:
             while self.step():  # start=False: drain synchronously
                 pass
+        # a drain thread killed by _fatal leaves its queue behind: fail
+        # those tickets so their waiters unblock instead of hanging
+        with self._cv:
+            leftovers = list(self._queue)
+            self._queue.clear()
+        for t in leftovers:
+            self._finish(t, error=self._fatal if self._fatal is not None
+                         else QueryCancelled(
+                             f"query {t.qid} cancelled: server closed"))
         self.lru.clear()
+
+    def recover(self) -> "QueryServer":
+        """Clear a ``_fatal`` invariant violation and resume serving.
+
+        The zero-retrace contract violation parks its exception in
+        ``_fatal`` and stops the drain thread — every later ``submit``
+        re-raises it. Recovery drops the poisoned plan cache entirely
+        (every signature re-traces — correct, just cold), evicts the
+        residency LRU, and restarts the drain thread. A no-op on a
+        healthy server; raises on a closed one."""
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("cannot recover a closed QueryServer")
+            was_fatal = self._fatal is not None
+            self._fatal = None
+        if was_fatal:
+            self.plans = PlanCache(self.plans.capacity)
+            self.lru.clear()
+            telemetry.record_fault("serve_recover")
+        if self._started and (self._worker is None
+                              or not self._worker.is_alive()):
+            self._worker = self._spawn_worker()
+        return self
 
     def __enter__(self) -> "QueryServer":
         return self

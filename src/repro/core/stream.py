@@ -48,6 +48,19 @@ tracing enabled (``REPRO_TRACE``, DESIGN.md §14) every stage interval is
 ALSO recorded as a telemetry span — ``emit_stage`` folds the stat and the
 span from the same timestamp pair, so ``StreamStats`` and the Chrome
 trace reconcile by construction.
+
+Fault tolerance (DESIGN.md §15): both drivers probe the fault-injection
+harness (``faults.maybe_inject``) at their three per-partition stages,
+retry ``TransientTransferError`` with exponential backoff
+(``transfer_retries`` / ``transfer_backoff_ms``), and respond to
+``DeviceOOMError`` by retiring the prefetch ring, halving the depth
+(floor: the synchronous depth-0 mode) and resuming from the failed
+partition — folds are strictly in order, so the carried accumulator is
+exact and recovered results stay bit-identical to a fault-free run. Any
+terminal error leaves the ring CLEAN: queued transfer futures are
+cancelled before the pool shuts down, and ``StreamStats`` (including
+``retries`` / ``degradations``) is final whether the driver returned or
+raised.
 """
 from __future__ import annotations
 
@@ -56,11 +69,12 @@ import time
 import warnings
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 
-from repro.core import telemetry
+from repro.core import faults, telemetry
+from repro.core.faults import DeviceOOMError, TransientTransferError
 
 
 @dataclasses.dataclass
@@ -83,6 +97,11 @@ class StreamStats:
     # device_put count. Standalone PartitionedQuery runs leave both at 0.
     lru_hits: int = 0
     shared_hits: int = 0
+    # fault tolerance (DESIGN.md §15): transfer retries performed after
+    # TransientTransferErrors, and depth halvings performed after
+    # DeviceOOMErrors (``prefetch_depth`` reflects the FINAL depth)
+    retries: int = 0
+    degradations: int = 0
     # query id the run's trace spans are tagged with (telemetry.next_qid
     # via plan.Query; None on runs driven outside the query layer)
     qid: Optional[int] = None
@@ -151,6 +170,67 @@ def _block(x) -> None:
     jax.block_until_ready(x)
 
 
+# ---------------------------------------------------------------------------
+# Fault handling (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+class _Restart(Exception):
+    """Internal carrier for OOM depth-degradation (never escapes this
+    module): holds the cause, the accumulator folded so far, and the
+    position of the partition whose transfer/compute/fold cycle failed.
+    Folds are strictly in order, so ``acc`` covers exactly
+    ``items[start:pos]`` and the outer driver can retire the ring, halve
+    the depth, and resume from ``pos`` without re-folding anything."""
+
+    def __init__(self, cause: BaseException, acc, pos: int):
+        super().__init__(str(cause))
+        self.cause = cause
+        self.acc = acc
+        self.pos = pos
+
+
+def _degrade(depth: int, cause: BaseException, stats: StreamStats) -> int:
+    """Halve the prefetch depth after a DeviceOOMError (floor 0 = the
+    synchronous reference mode); at the floor the OOM is terminal."""
+    if depth <= 0:
+        raise cause
+    new_depth = depth // 2
+    stats.degradations += 1
+    stats.prefetch_depth = new_depth
+    telemetry.record_fault("degrade", qid=stats.qid, depth_from=depth,
+                           depth_to=new_depth, cause=type(cause).__name__)
+    return new_depth
+
+
+def _transfer_with_retry(transfer: Callable, item, part,
+                         stats: StreamStats):
+    """One transfer through the injection probe + bounded exponential
+    backoff on ``TransientTransferError`` (the only retryable class —
+    ``DeviceOOMError`` degrades instead, anything else is terminal)."""
+    from repro.kernels import dispatch
+    pol = dispatch.policy()
+    retries = max(int(pol.transfer_retries), 0)
+    backoff_s = max(float(pol.transfer_backoff_ms), 0.0) * 1e-3
+    attempt = 0
+    while True:
+        try:
+            faults.maybe_inject("transfer", part)
+            return transfer(item)
+        except TransientTransferError as exc:
+            if attempt >= retries:
+                raise
+            delay = backoff_s * (2 ** attempt)
+            attempt += 1
+            stats.retries += 1
+            telemetry.record_fault("retry", qid=stats.qid, part=part,
+                                   attempt=attempt,
+                                   backoff_ms=round(delay * 1e3, 3),
+                                   error=str(exc))
+            if delay > 0:
+                time.sleep(delay)
+
+
 def pipelined_fold(items: Sequence, transfer: Callable, compute: Callable,
                    fold: Callable, init, depth: int, stats: StreamStats,
                    nbytes_of: Optional[Callable] = None,
@@ -175,113 +255,169 @@ def pipelined_fold(items: Sequence, transfer: Callable, compute: Callable,
     against each other (drain included — no global barrier).
 
     ``label_of(item)`` (optional) names the partition in trace spans'
-    ``part`` attr. All spans carry ``stats.qid``.
+    ``part`` attr and in fault-injection coordinates (falling back to the
+    item's position). All spans carry ``stats.qid``.
+
+    Fault behavior (DESIGN.md §15): transient transfer failures retry
+    with backoff; a ``DeviceOOMError`` at any stage retires the ring,
+    halves ``depth`` and resumes from the failed partition (terminal at
+    depth 0); any terminal error cancels the queued ring futures before
+    propagating, so no transfer outlives the call.
     """
     tel = telemetry.registry() if telemetry.enabled() else None
+    pos, acc = 0, init
+    while True:
+        try:
+            return _fold_pipeline(items, pos, acc, transfer, compute, fold,
+                                  depth, stats, nbytes_of, label_of, tel)
+        except _Restart as r:
+            depth = _degrade(depth, r.cause, stats)
+            pos, acc = r.pos, r.acc
+
+
+def _fold_pipeline(items, start, acc, transfer, compute, fold, depth,
+                   stats, nbytes_of, label_of, tel):
+    """One pass of ``pipelined_fold`` from position ``start``; raises
+    ``_Restart`` on a recoverable DeviceOOMError."""
+
+    def part_of(i):
+        return label_of(items[i]) if label_of is not None else i
 
     def attr(item):
         if tel is None or label_of is None:
             return _EMPTY
         return {"part": label_of(item)}
 
-    acc = init
+    def xfer(i):
+        return _transfer_with_retry(transfer, items[i], part_of(i), stats)
+
     if depth <= 0:
-        for item in items:
-            a = attr(item)
-            t0 = time.perf_counter()
-            cols = transfer(item)
-            _block(cols)
-            t1 = time.perf_counter()
-            emit_stage(tel, stats, "h2d_ms", "transfer", t0, t1,
-                       "transfer", a)
-            partial = compute(item, cols)
-            _block(partial)
-            t2 = time.perf_counter()
-            emit_stage(tel, stats, "compute_ms", "program", t1, t2,
-                       "device", a)
-            acc = fold(acc, item, partial)
-            t3 = time.perf_counter()
-            emit_stage(tel, stats, "merge_ms", "fold", t2, t3, "main", a)
-            stats.transferred += 1
-            stats.executed += 1
-            if nbytes_of is not None:
-                stats.inflight_bytes_max = max(stats.inflight_bytes_max,
-                                               nbytes_of(item))
+        i = start
+        try:
+            while i < len(items):
+                item = items[i]
+                a = attr(item)
+                t0 = time.perf_counter()
+                cols = xfer(i)
+                _block(cols)
+                t1 = time.perf_counter()
+                emit_stage(tel, stats, "h2d_ms", "transfer", t0, t1,
+                           "transfer", a)
+                faults.maybe_inject("compute", part_of(i))
+                partial = compute(item, cols)
+                _block(partial)
+                t2 = time.perf_counter()
+                emit_stage(tel, stats, "compute_ms", "program", t1, t2,
+                           "device", a)
+                faults.maybe_inject("fold", part_of(i))
+                acc = fold(acc, item, partial)
+                t3 = time.perf_counter()
+                emit_stage(tel, stats, "merge_ms", "fold", t2, t3, "main", a)
+                stats.transferred += 1
+                stats.executed += 1
+                if nbytes_of is not None:
+                    stats.inflight_bytes_max = max(stats.inflight_bytes_max,
+                                                   nbytes_of(item))
+                i += 1
+        except DeviceOOMError as exc:
+            # at depth 0 _degrade re-raises; the carrier keeps one shape
+            raise _Restart(exc, acc, i) from None
         return acc
 
-    ring: deque = deque()  # (item, future cols): transfers in flight
-    pending = None  # (item, async partial, t_disp): the ONE dispatched program
-    idx = 0
+    ring: deque = deque()  # (pos, item, future cols): transfers in flight
+    pending = None  # (pos, item, async partial, t_disp): ONE dispatched
+    idx = start
+    head = start  # position of the next unfolded item (restart point)
     inflight = 0
 
-    def do_transfer(item):
+    def do_transfer(i):
         # runs on the worker thread; the span is the copy-issue window
         # there, rendered on the transfer track
         if tel is None:
-            return transfer(item)
+            return xfer(i)
         t0 = time.perf_counter()
-        cols = transfer(item)
+        cols = xfer(i)
         tel.record("transfer", t0, time.perf_counter() - t0, "transfer",
-                   qid=stats.qid, **attr(item))
+                   qid=stats.qid, **attr(items[i]))
         return cols
 
     with ThreadPoolExecutor(max_workers=1) as pool:
+        try:
 
-        def top_up():
-            # the dispatched-but-unfolded program occupies a ring slot too:
-            # at most depth+1 partitions live beyond the fold head, exactly
-            # the budget clamp_depth accounts for
-            nonlocal idx, inflight
-            while (len(ring) + (pending is not None) < depth + 1
-                   and idx < len(items)):
-                item = items[idx]
-                idx += 1
-                ring.append((item, pool.submit(do_transfer, item)))
-                stats.transferred += 1
-                if nbytes_of is not None:
-                    inflight += nbytes_of(item)
-                    stats.inflight_bytes_max = max(stats.inflight_bytes_max,
-                                                   inflight)
+            def top_up():
+                # the dispatched-but-unfolded program occupies a ring slot
+                # too: at most depth+1 partitions live beyond the fold
+                # head, exactly the budget clamp_depth accounts for
+                nonlocal idx, inflight
+                while (len(ring) + (pending is not None) < depth + 1
+                       and idx < len(items)):
+                    item = items[idx]
+                    ring.append((idx, item, pool.submit(do_transfer, idx)))
+                    idx += 1
+                    stats.transferred += 1
+                    if nbytes_of is not None:
+                        inflight += nbytes_of(item)
+                        stats.inflight_bytes_max = max(
+                            stats.inflight_bytes_max, inflight)
 
-        def dispatch_head():
-            item, fut = ring.popleft()
-            a = attr(item)
-            t0 = time.perf_counter()
-            cols = fut.result()  # ~0 when the copy hid behind compute
-            t1 = time.perf_counter()
-            emit_stage(tel, stats, "h2d_ms", "h2d_wait", t0, t1, "main", a)
-            partial = compute(item, cols)
-            t2 = time.perf_counter()
-            emit_stage(tel, stats, "compute_ms", "dispatch", t1, t2,
-                       "main", a)
-            stats.executed += 1
-            return item, partial, t2
+            def dispatch_head():
+                i, item, fut = ring.popleft()
+                a = attr(item)
+                t0 = time.perf_counter()
+                cols = fut.result()  # ~0 when the copy hid behind compute
+                t1 = time.perf_counter()
+                emit_stage(tel, stats, "h2d_ms", "h2d_wait", t0, t1,
+                           "main", a)
+                faults.maybe_inject("compute", part_of(i))
+                partial = compute(item, cols)
+                t2 = time.perf_counter()
+                emit_stage(tel, stats, "compute_ms", "dispatch", t1, t2,
+                           "main", a)
+                stats.executed += 1
+                return i, item, partial, t2
 
-        top_up()
-        if ring:
-            pending = dispatch_head()
-        while pending is not None:
-            item, partial, t_disp = pending
-            a = attr(item)
-            t0 = time.perf_counter()
-            _block(partial)  # the device is the gate
-            t1 = time.perf_counter()
-            emit_stage(tel, stats, "compute_ms", "block", t0, t1, "main", a)
-            # the program's dispatch->retire window on the device track;
-            # its halves already fed compute_ms, so no stats field here
-            emit_stage(tel, stats, None, "program", t_disp, t1, "device", a)
-            # program ``i`` retired: launch ``i+1`` BEFORE folding ``i``
-            # so the fold below runs under the next program, not after it
-            pending = dispatch_head() if ring else None
-            t1 = time.perf_counter()
-            acc = fold(acc, item, partial)
-            t2 = time.perf_counter()
-            emit_stage(tel, stats, "merge_ms", "fold", t1, t2, "main", a)
-            if nbytes_of is not None:
-                inflight -= nbytes_of(item)
-            # the fold head advanced: replenish the transfer ring (these
-            # copies run on the worker while the next program executes)
             top_up()
+            if ring:
+                pending = dispatch_head()
+            while pending is not None:
+                i, item, partial, t_disp = pending
+                head = i  # acc covers items[start:i]
+                a = attr(item)
+                t0 = time.perf_counter()
+                _block(partial)  # the device is the gate
+                t1 = time.perf_counter()
+                emit_stage(tel, stats, "compute_ms", "block", t0, t1,
+                           "main", a)
+                # the program's dispatch->retire window on the device
+                # track; its halves already fed compute_ms, no stats field
+                emit_stage(tel, stats, None, "program", t_disp, t1,
+                           "device", a)
+                # program ``i`` retired: launch ``i+1`` BEFORE folding
+                # ``i`` so the fold runs under the next program
+                pending = dispatch_head() if ring else None
+                t1 = time.perf_counter()
+                faults.maybe_inject("fold", part_of(i))
+                acc = fold(acc, item, partial)
+                t2 = time.perf_counter()
+                emit_stage(tel, stats, "merge_ms", "fold", t1, t2,
+                           "main", a)
+                head = i + 1
+                if nbytes_of is not None:
+                    inflight -= nbytes_of(item)
+                # the fold head advanced: replenish the transfer ring
+                # (copies run on the worker while the next program runs)
+                top_up()
+        except DeviceOOMError as exc:
+            raise _Restart(exc, acc, head) from None
+        finally:
+            # terminal or restarting: cancel queued copies so nothing the
+            # caller will never fold still runs under the pool shutdown.
+            # (The one possibly-running transfer finishes and is dropped;
+            # a restart re-transfers into FRESH buffers, so donated
+            # buffers are never reused.)
+            for _, _, fut in ring:
+                fut.cancel()
+            ring.clear()
     return acc
 
 
@@ -312,73 +448,115 @@ def pipelined_ranked_fold(items: Sequence, transfer: Callable,
     Returns ``(state, ranked_skipped, prefetch_wasted)`` where
     ``prefetch_wasted`` counts transferred-then-pruned items (a subset of
     ``ranked_skipped``).
+
+    Fault behavior matches ``pipelined_fold`` (DESIGN.md §15): transient
+    transfer retries, OOM depth-degradation resuming from the failed
+    partition (per-item decisions re-checked — the bound only tightens,
+    so nothing skipped un-skips), and ring cleanup on terminal errors.
     """
     tel = telemetry.registry() if telemetry.enabled() else None
+    # per-position outcome ("issue"/"head" prune, "exec"), overwritten on
+    # a degraded re-run so skip/waste counts never double-count an item
+    decisions: Dict[int, str] = {}
+    pos, state = 0, None
+    while True:
+        try:
+            state = _ranked_pipeline(items, pos, state, transfer, compute,
+                                     fold, prune, depth, stats, nbytes_of,
+                                     label_of, tel, decisions)
+            break
+        except _Restart as r:
+            depth = _degrade(depth, r.cause, stats)
+            pos, state = r.pos, r.acc
+    skipped = sum(1 for d in decisions.values() if d != "exec")
+    wasted = sum(1 for d in decisions.values() if d == "head")
+    return state, skipped, wasted
+
+
+def _ranked_pipeline(items, start, state, transfer, compute, fold, prune,
+                     depth, stats, nbytes_of, label_of, tel, decisions):
+    """One pass of ``pipelined_ranked_fold`` from position ``start``;
+    raises ``_Restart`` on a recoverable DeviceOOMError."""
+
+    def part_of(i):
+        return label_of(items[i]) if label_of is not None else i
 
     def attr(item):
         if tel is None or label_of is None:
             return _EMPTY
         return {"part": label_of(item)}
 
-    def do_transfer(item):
+    def do_transfer(i):
         if tel is None:
-            return transfer(item)
+            return _transfer_with_retry(transfer, items[i], part_of(i),
+                                        stats)
         t0 = time.perf_counter()
-        cols = transfer(item)
+        cols = _transfer_with_retry(transfer, items[i], part_of(i), stats)
         tel.record("transfer", t0, time.perf_counter() - t0, "transfer",
-                   qid=stats.qid, **attr(item))
+                   qid=stats.qid, **attr(items[i]))
         return cols
 
-    state = None
-    ring: deque = deque()  # (item, future cols) transferred, not yet gated
-    idx = 0
-    skipped = 0
-    wasted = 0
+    ring: deque = deque()  # (pos, item, future cols): not yet bound-gated
+    idx = start
+    head = start
     inflight = 0
     with ThreadPoolExecutor(max_workers=1) as pool:
-        while idx < len(items) or ring:
-            while len(ring) < depth + 1 and idx < len(items):
-                item = items[idx]
-                idx += 1
-                if prune(state, item):
-                    skipped += 1
+        try:
+            while idx < len(items) or ring:
+                while len(ring) < depth + 1 and idx < len(items):
+                    i, item = idx, items[idx]
+                    idx += 1
+                    if prune(state, item):
+                        decisions[i] = "issue"
+                        if tel is not None:
+                            tel.instant("ranked_prune", "main",
+                                        qid=stats.qid, stage="issue",
+                                        **attr(item))
+                        continue
+                    # speculative, off-thread: bytes at risk, not results
+                    ring.append((i, item, pool.submit(do_transfer, i)))
+                    stats.transferred += 1
+                    if nbytes_of is not None:
+                        inflight += nbytes_of(item)
+                        stats.inflight_bytes_max = max(
+                            stats.inflight_bytes_max, inflight)
+                if not ring:
+                    break
+                i, item, fut = ring.popleft()
+                head = i  # state covers every fold up to (not incl.) i
+                if nbytes_of is not None:
+                    inflight -= nbytes_of(item)
+                if prune(state, item):  # merges since issue tightened it
+                    decisions[i] = "head"
                     if tel is not None:
                         tel.instant("ranked_prune", "main", qid=stats.qid,
-                                    stage="issue", **attr(item))
+                                    stage="head", wasted_transfer=True,
+                                    **attr(item))
+                    fut.cancel()  # un-started copies are dropped entirely
                     continue
-                # speculative, off-thread: bytes at risk, not results
-                ring.append((item, pool.submit(do_transfer, item)))
-                stats.transferred += 1
-                if nbytes_of is not None:
-                    inflight += nbytes_of(item)
-                    stats.inflight_bytes_max = max(stats.inflight_bytes_max,
-                                                   inflight)
-            if not ring:
-                break
-            item, fut = ring.popleft()
-            if nbytes_of is not None:
-                inflight -= nbytes_of(item)
-            if prune(state, item):  # merges since issue tightened the bound
-                skipped += 1
-                wasted += 1
-                if tel is not None:
-                    tel.instant("ranked_prune", "main", qid=stats.qid,
-                                stage="head", wasted_transfer=True,
-                                **attr(item))
-                fut.cancel()  # un-started copies are dropped entirely
-                continue
-            a = attr(item)
-            t0 = time.perf_counter()
-            cols = fut.result()
-            t1 = time.perf_counter()
-            emit_stage(tel, stats, "h2d_ms", "h2d_wait", t0, t1, "main", a)
-            partial = compute(item, cols)  # gated: pruned items never run
-            _block(partial)
-            t2 = time.perf_counter()
-            emit_stage(tel, stats, "compute_ms", "program", t1, t2,
-                       "device", a)
-            state = fold(state, item, partial)
-            t3 = time.perf_counter()
-            emit_stage(tel, stats, "merge_ms", "fold", t2, t3, "main", a)
-            stats.executed += 1
-    return state, skipped, wasted
+                a = attr(item)
+                t0 = time.perf_counter()
+                cols = fut.result()
+                t1 = time.perf_counter()
+                emit_stage(tel, stats, "h2d_ms", "h2d_wait", t0, t1,
+                           "main", a)
+                faults.maybe_inject("compute", part_of(i))
+                partial = compute(item, cols)  # gated: pruned never run
+                _block(partial)
+                t2 = time.perf_counter()
+                emit_stage(tel, stats, "compute_ms", "program", t1, t2,
+                           "device", a)
+                faults.maybe_inject("fold", part_of(i))
+                state = fold(state, item, partial)
+                t3 = time.perf_counter()
+                emit_stage(tel, stats, "merge_ms", "fold", t2, t3,
+                           "main", a)
+                stats.executed += 1
+                decisions[i] = "exec"
+        except DeviceOOMError as exc:
+            raise _Restart(exc, state, head) from None
+        finally:
+            for _, _, fut in ring:
+                fut.cancel()
+            ring.clear()
+    return state

@@ -134,6 +134,22 @@ class Table:
     def column(self, name: str):
         return self.columns[name]
 
+    def validate(self) -> "Table":
+        """Integrity-check every encoded column (DESIGN.md §15).
+
+        Verifies the structural invariants (RLE run lists sorted, disjoint
+        and sentinel-terminated; Index positions strictly increasing),
+        packed bit widths against the recorded domains, dictionary codes
+        against the dictionaries, and decoded values against the recorded
+        value domains. Raises ``faults.ValidationError`` on the first
+        violation; returns ``self`` so ingest call sites can chain it."""
+        for name, col in self.columns.items():
+            compress.validate_encoded(
+                col, name, self.nrows,
+                dictionary=self.dictionaries.get(name),
+                domain=self.domains.get(name))
+        return self
+
     def decode(self, name: str) -> np.ndarray:
         """Materialize a column to host values (tests / inspection)."""
         vals = np.asarray(decode_column(self.columns[name]))

@@ -56,8 +56,11 @@ import time
 from typing import Callable, Dict, List, Optional
 
 # Logical stage tracks (chrome-trace rows), in render order. Spans may
-# name other tracks; they get rows after these.
-TRACKS = ("main", "transfer", "device")
+# name other tracks; they get rows after these. ``fault`` carries the
+# resilience events (injections, retries, degradations, cancellations —
+# DESIGN.md §15), kept on their own row so a chaos trace reads at a
+# glance.
+TRACKS = ("main", "transfer", "device", "fault")
 
 _DEFAULT_BUFFER = 1 << 16
 
@@ -298,6 +301,23 @@ def record_h2d(nbytes: int, tree=None, qid: Optional[int] = None) -> None:
         fn(nbytes, tree)
     if enabled():
         _REGISTRY.instant("h2d", track="transfer", bytes=nbytes, qid=qid)
+
+
+# ---------------------------------------------------------------------------
+# Fault-path accounting (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+def record_fault(event: str, **attrs) -> None:
+    """Book one fault-path event: an injected fault, a transfer retry, a
+    depth degradation, an OOM-triggered serving fallback, a cancellation
+    or deadline expiry. The ``fault.<event>`` counter is ALWAYS on (like
+    the H2D counters — fault handling is rare and load-bearing, so
+    operators must see it without enabling tracing); with tracing on the
+    event also lands in the ring as an instant on the ``fault`` track."""
+    _REGISTRY.add_counter(f"fault.{event}")
+    if enabled():
+        _REGISTRY.instant(f"fault.{event}", track="fault", **attrs)
 
 
 @contextlib.contextmanager

@@ -18,8 +18,10 @@ Policy resolution, in order:
      ``REPRO_SEGSUM_MAX_GROUPS``, ``REPRO_PACK``, ``REPRO_PACK_MAX_BITS``,
      ``REPRO_UNPACK_MIN_VALS``, ``REPRO_PREFETCH_DEPTH``,
      ``REPRO_SERVE_BUDGET_BYTES``, ``REPRO_PLAN_CACHE_SIZE``,
-     ``REPRO_SERVE_MAX_BATCH``, ``REPRO_TRACE``, ``REPRO_TRACE_BUFFER`` —
-     docs/KNOBS.md is the canonical table),
+     ``REPRO_SERVE_MAX_BATCH``, ``REPRO_TRACE``, ``REPRO_TRACE_BUFFER``,
+     ``REPRO_FAULTS``, ``REPRO_TRANSFER_RETRIES``,
+     ``REPRO_TRANSFER_BACKOFF_MS`` — docs/KNOBS.md is the canonical
+     table),
   3. defaults: Pallas on TPU backends only (interpret mode elsewhere is a
      correctness harness, not a fast path), size thresholds below which
      the fused XLA op wins regardless of backend.
@@ -123,6 +125,16 @@ class DispatchPolicy:
     # ``trace_buffer_events`` bounds the event ring (oldest drop beyond).
     enable_trace: bool = False
     trace_buffer_events: int = 1 << 16
+    # fault tolerance (core/faults.py, core/stream.py, DESIGN.md §15):
+    # ``enable_fault_injection`` gates the deterministic fault harness —
+    # off, every probe site costs one policy-field read (entering a
+    # FaultPlan scope flips it on). ``transfer_retries`` bounds how many
+    # times a TransientTransferError is retried per partition transfer;
+    # ``transfer_backoff_ms`` is the first retry's delay, doubling each
+    # further attempt (exponential backoff).
+    enable_fault_injection: bool = False
+    transfer_retries: int = 3
+    transfer_backoff_ms: float = 10.0
 
     def pallas_enabled(self) -> bool:
         if self.use_pallas is not None:
@@ -156,6 +168,13 @@ def _env_opt_int(env, name: str, default: Optional[int]) -> Optional[int]:
     if raw is None or raw.strip().lower() in ("", "none", "auto"):
         return default
     return int(raw)
+
+
+def _env_float(env, name: str, default: float) -> float:
+    raw = env.get(name)
+    if raw is None:
+        return default
+    return float(raw)
 
 
 def policy_from_env(env=None) -> DispatchPolicy:
@@ -198,6 +217,11 @@ def policy_from_env(env=None) -> DispatchPolicy:
         enable_trace=bool(_env_tristate(env, "REPRO_TRACE")),
         trace_buffer_events=_env_int(env, "REPRO_TRACE_BUFFER",
                                      base.trace_buffer_events),
+        enable_fault_injection=bool(_env_tristate(env, "REPRO_FAULTS")),
+        transfer_retries=_env_int(env, "REPRO_TRANSFER_RETRIES",
+                                  base.transfer_retries),
+        transfer_backoff_ms=_env_float(env, "REPRO_TRANSFER_BACKOFF_MS",
+                                       base.transfer_backoff_ms),
     )
 
 

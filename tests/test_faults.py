@@ -1,0 +1,584 @@
+"""Fault-tolerant execution (DESIGN.md §15, core/faults.py).
+
+Five layers:
+
+  1. FaultPlan units — exact (site, partition, attempt) coordinates,
+     plan-global attempt counters, scoped activation flipping
+     ``enable_fault_injection``, seeded determinism, env knobs;
+  2. synthetic harness resilience (jax-free callbacks) — transient
+     transfer faults retry with backoff and stay bit-identical, retry
+     exhaustion re-raises, OOM halves the prefetch depth and resumes from
+     the failed partition, exhaustion at depth 0 is terminal, and the
+     ring always cleans up (futures cancelled, stats finalized);
+  3. real-engine recovery — a seeded fault schedule on a partitioned
+     query recovers BIT-IDENTICAL results across all six encodings and
+     all three terminal shapes, with the events visible in the always-on
+     fault counters and ``explain_analyze``;
+  4. serving resilience — deadlines, cancellation, ``result(timeout=)``
+     dequeuing, per-subscriber failure isolation, the LRU-evicting OOM
+     fallback, ``close(drain=False)`` and ``recover()``;
+  5. integrity validation — every encoding round-trip validates clean;
+     corrupted run lists, positions, sentinels, zone maps, dictionary
+     codes and packed widths fail loudly with ``ValidationError``.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import compress, faults, stream, telemetry
+from repro.core.encodings import IndexColumn, RLEColumn
+from repro.core.faults import (
+    DeviceOOMError,
+    Fault,
+    FaultPlan,
+    QueryCancelled,
+    QueryDeadlineExceeded,
+    TransientTransferError,
+    ValidationError,
+)
+from repro.core.partition import PartitionedQuery, PartitionedTable
+from repro.core.plan import col
+from repro.core.serve import QueryServer
+from repro.core.table import Table
+from repro.kernels import dispatch
+
+CFG = compress.CompressionConfig(plain_threshold=1000)
+
+SIX_ENCODINGS = ["plain", "plain_dict", "rle", "index", "rle_index",
+                 "plain_index"]
+
+
+def _counter(name):
+    return telemetry.registry().counter(name)
+
+
+# ---------------------------------------------------------------------------
+# 1. FaultPlan units
+# ---------------------------------------------------------------------------
+
+
+def test_maybe_inject_is_noop_without_plan():
+    assert not dispatch.policy().enable_fault_injection
+    faults.maybe_inject("transfer", 0)  # no plan, injection off: no-op
+    assert faults.active() is None
+
+
+def test_plan_fires_at_exact_coordinates():
+    plan = FaultPlan().transient(part=2, attempt=1)
+    with plan:
+        assert dispatch.policy().enable_fault_injection
+        faults.maybe_inject("transfer", 2)  # attempt 0: scheduled at 1
+        faults.maybe_inject("transfer", 3)  # other partition
+        faults.maybe_inject("compute", 2)  # other site
+        with pytest.raises(TransientTransferError):
+            faults.maybe_inject("transfer", 2)  # attempt 1 fires
+        faults.maybe_inject("transfer", 2)  # attempt 2: past it
+        assert plan.attempts("transfer", 2) == 3
+    assert not dispatch.policy().enable_fault_injection
+    assert [f.attempt for f in plan.fired] == [1]
+
+
+def test_plan_kinds_and_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan().add(Fault("transfer", 0, 0, "gremlin"))
+    plan = FaultPlan().oom(1, site="compute").latency(0, ms=5)
+    with plan:
+        t0 = time.perf_counter()
+        faults.maybe_inject("transfer", 0)  # latency: sleeps, no raise
+        assert time.perf_counter() - t0 >= 4e-3
+        with pytest.raises(DeviceOOMError):
+            faults.maybe_inject("compute", 1)
+    assert sorted(f.kind for f in plan.fired) == ["latency", "oom"]
+
+
+def test_plans_do_not_nest():
+    with FaultPlan():
+        with pytest.raises(RuntimeError, match="already active"):
+            with FaultPlan():
+                pass
+    assert faults.active() is None
+
+
+def test_seeded_plan_is_deterministic():
+    a = FaultPlan.seeded(7, parts=16, transients=3, ooms=1)
+    b = FaultPlan.seeded(7, parts=16, transients=3, ooms=1)
+    assert a.scheduled() == b.scheduled()
+    kinds = [f.kind for f in a.scheduled()]
+    assert kinds.count("transient") == 3 and kinds.count("oom") == 1
+    # distinct partitions, all at attempt 0 (one retry budget recovers each)
+    coords = {(f.site, f.part) for f in a.scheduled()}
+    assert len(coords) == 4
+    assert all(f.attempt == 0 for f in a.scheduled())
+    with pytest.raises(ValueError, match="distinct partitions"):
+        FaultPlan.seeded(0, parts=3, transients=3, ooms=1)
+
+
+def test_fault_env_knobs():
+    pol = dispatch.policy_from_env({"REPRO_FAULTS": "1",
+                                    "REPRO_TRANSFER_RETRIES": "5",
+                                    "REPRO_TRANSFER_BACKOFF_MS": "2.5"})
+    assert pol.enable_fault_injection
+    assert pol.transfer_retries == 5
+    assert pol.transfer_backoff_ms == 2.5
+    off = dispatch.policy_from_env({})
+    assert not off.enable_fault_injection
+    assert off.transfer_retries == 3
+    assert off.transfer_backoff_ms == 10.0
+
+
+# ---------------------------------------------------------------------------
+# 2. synthetic harness resilience (no jax values)
+# ---------------------------------------------------------------------------
+
+
+def _fold_under_plan(plan, depth, items=None, **over):
+    """Run pipelined_fold with identity-ish callbacks under ``plan``."""
+    items = list(range(6)) if items is None else items
+    stats = stream.StreamStats(prefetch_depth=depth)
+    calls = {"transfer": 0}
+
+    def transfer(x):
+        calls["transfer"] += 1
+        return x
+
+    with dispatch.overrides(transfer_backoff_ms=0.0, **over):
+        with plan:
+            out = stream.pipelined_fold(items, transfer, lambda x, c: c * 10,
+                                        lambda acc, x, p: acc + [p], [],
+                                        depth, stats)
+    return out, stats, calls
+
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_transient_transfer_retries_bit_identical(depth):
+    plan = FaultPlan().transient(part=3).transient(part=1)
+    out, stats, calls = _fold_under_plan(plan, depth)
+    assert out == [x * 10 for x in range(6)]
+    assert stats.retries == 2
+    assert stats.degradations == 0
+    assert len(plan.fired) == 2
+    assert calls["transfer"] == 6  # the probe raises BEFORE the copy
+
+
+def test_transient_retry_exhaustion_reraises():
+    plan = FaultPlan()
+    for attempt in range(3):  # budget of 2 retries -> attempt 2 is fatal
+        plan.transient(part=4, attempt=attempt)
+    with pytest.raises(TransientTransferError):
+        _fold_under_plan(plan, 2, transfer_retries=2)
+    assert len(plan.fired) == 3
+
+
+@pytest.mark.parametrize("site", ["compute", "fold"])
+def test_oom_degrades_depth_and_recovers(site):
+    plan = FaultPlan().oom(part=2, site=site)
+    out, stats, _ = _fold_under_plan(plan, 4)
+    assert out == [x * 10 for x in range(6)]  # acc resumed, never re-folded
+    assert stats.degradations == 1
+    assert stats.prefetch_depth == 2  # halved from 4
+    assert [f.kind for f in plan.fired] == ["oom"]
+
+
+def test_oom_degrades_to_zero_then_terminal():
+    plan = FaultPlan()
+    for attempt in range(3):  # depth 2 -> 1 -> 0 -> terminal
+        plan.oom(part=1, attempt=attempt, site="compute")
+    stats = stream.StreamStats(prefetch_depth=2)
+    with pytest.raises(DeviceOOMError):
+        with plan:
+            stream.pipelined_fold(list(range(4)), lambda x: x,
+                                  lambda x, c: c, lambda a, x, p: a, None,
+                                  2, stats)
+    assert stats.degradations == 2
+    assert stats.prefetch_depth == 0
+
+
+def test_terminal_fault_cleans_up_ring_threads():
+    n0 = threading.active_count()
+    plan = FaultPlan().oom(part=5, attempt=0, site="fold")
+    with pytest.raises(DeviceOOMError):
+        _fold_under_plan(plan, 0)  # depth 0: no headroom to degrade
+    deadline = time.perf_counter() + 5
+    while threading.active_count() > n0 and time.perf_counter() < deadline:
+        time.sleep(0.01)  # executor shutdown is asynchronous
+    assert threading.active_count() <= n0
+
+
+def test_fault_events_hit_always_on_counters():
+    injected0 = _counter("fault.injected")
+    retry0 = _counter("fault.retry")
+    degrade0 = _counter("fault.degrade")
+    plan = FaultPlan().transient(part=0).oom(part=3, site="compute")
+    _fold_under_plan(plan, 2)
+    assert _counter("fault.injected") - injected0 == 2
+    assert _counter("fault.retry") - retry0 == 1
+    assert _counter("fault.degrade") - degrade0 == 1
+
+
+# ---------------------------------------------------------------------------
+# 3. real-engine recovery: bit-identical across encodings & terminals
+# ---------------------------------------------------------------------------
+
+
+def _enc_table(rng, enc, n=9_000, parts=6):
+    k = np.sort(rng.integers(0, 40, n)).astype(np.int32)
+    v = rng.integers(0, 2000, n).astype(np.int32)
+    f = rng.random(n).astype(np.float32)
+    if enc == "plain_index":
+        v = np.where(rng.random(n) < 0.002, 1_500_000_000, v).astype(np.int32)
+    if enc == "plain_dict":
+        vocab = np.array([f"key_{i:03d}" for i in range(40)])
+        data, encs = {"k": vocab[k], "v": v, "f": f}, None
+    else:
+        data, encs = {"k": k, "v": v, "f": f}, {"k": enc, "v": enc}
+    return PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=parts,
+                                        encodings=encs, pack=True)
+
+
+def _terminals(pt):
+    yield "agg", lambda: (PartitionedQuery(pt).filter(col("v") > 100)
+                          .aggregate({"s": ("sum", "v"),
+                                      "c": ("count", None)}))
+    yield "groupby", lambda: (PartitionedQuery(pt).filter(col("v") > 100)
+                              .groupby(["k"], {"s": ("sum", "v")},
+                                       num_groups_cap=64))
+    yield "ranked", lambda: (PartitionedQuery(pt).filter(col("v") > 100)
+                             .order_by("v", descending=True, limit=9,
+                                       cols=["k"]))
+
+
+def _payload(r):
+    if hasattr(r, "num_groups"):  # MergedGroupBy
+        ng = int(r.num_groups)
+        return {**{f"k:{g}": np.asarray(r.keys[g])[:ng] for g in r.keys},
+                **{f"a:{o}": np.asarray(r.aggs[o])[:ng] for o in r.aggs}}
+    if hasattr(r, "positions"):  # RankedTable
+        return {"pos": np.asarray(r.positions),
+                **{f"c:{n}": np.asarray(r.columns[n]) for n in r.columns}}
+    return {o: np.asarray(r[o]) for o in r}
+
+
+def _assert_same(a, b):
+    assert set(a) == set(b)
+    for key in a:
+        np.testing.assert_array_equal(a[key], b[key], err_msg=key)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("enc", SIX_ENCODINGS)
+def test_transient_recovery_bit_identical_all_encodings(rng, enc):
+    pt = _enc_table(rng, enc)
+    for name, mk in _terminals(pt):
+        clean = _payload(mk().run())
+        q = mk()
+        plan = FaultPlan().transient(0).transient(2).transient(4)
+        with dispatch.overrides(transfer_backoff_ms=0.0):
+            with plan:
+                faulted = _payload(q.run())
+        _assert_same(clean, faulted)
+        if name != "ranked":  # ranked pruning may skip a faulted partition
+            assert q.last_stats["retries"] == 3, (enc, name)
+            assert len(plan.fired) == 3
+
+
+@pytest.mark.slow
+def test_oom_degradation_bit_identical_all_terminals(rng):
+    pt = _enc_table(rng, "rle")
+    for name, mk in _terminals(pt):
+        clean = _payload(mk().run())
+        q = mk()
+        plan = FaultPlan().oom(part=1, site="compute")
+        with dispatch.overrides(prefetch_depth=2):
+            with plan:
+                faulted = _payload(q.run())
+        _assert_same(clean, faulted)
+        assert q.last_stats["degradations"] == 1, name
+        assert q.last_stats["prefetch_depth"] == 1, name
+
+
+def test_terminal_fault_surfaces_cleanly(rng):
+    pt = _enc_table(rng, "plain", n=4_000, parts=4)
+    q = (PartitionedQuery(pt).filter(col("v") > 100)
+         .aggregate({"s": ("sum", "v")}))
+    plan = FaultPlan()
+    for attempt in range(2):
+        plan.transient(part=2, attempt=attempt)
+    with dispatch.overrides(transfer_retries=1, transfer_backoff_ms=0.0):
+        with plan:
+            with pytest.raises(TransientTransferError):
+                q.run()
+    # the failed run still finalized its stats (satellite: no silent loss)
+    assert q.last_stats.get("retries") == 1
+    assert q.last_stats.get("executed", 0) >= 0
+    # the engine is not wedged: the same query re-runs clean
+    expected = _payload((PartitionedQuery(pt).filter(col("v") > 100)
+                         .aggregate({"s": ("sum", "v")})).run())
+    _assert_same(expected, _payload(q.run()))
+
+
+def test_explain_analyze_surfaces_resilience(rng):
+    pt = _enc_table(rng, "plain", n=4_000, parts=4)
+    q = (PartitionedQuery(pt).filter(col("v") > 100)
+         .aggregate({"s": ("sum", "v")}))
+    plan = FaultPlan().transient(1)
+    with dispatch.overrides(transfer_backoff_ms=0.0):
+        with plan:
+            text = q.explain_analyze()
+    assert "resilience:" in text
+    assert "1 transfer retry" in text
+
+
+def test_injection_disabled_pays_one_field_read(rng):
+    # not a wall-clock benchmark (CI gates that): just that the disabled
+    # path is truly inert — no plan consulted, no counters bumped
+    injected0 = _counter("fault.injected")
+    pt = _enc_table(rng, "plain", n=4_000, parts=4)
+    r = (PartitionedQuery(pt).filter(col("v") > 100)
+         .aggregate({"s": ("sum", "v")}))
+    assert r is not None
+    assert _counter("fault.injected") == injected0
+
+
+# ---------------------------------------------------------------------------
+# 4. serving resilience
+# ---------------------------------------------------------------------------
+
+
+def _serve_table(rng, n=6_000, parts=4):
+    data = {
+        "k": np.sort(rng.integers(0, 16, n)).astype(np.int32),
+        "v": rng.integers(0, 2000, n).astype(np.int32),
+    }
+    return PartitionedTable.from_arrays(data, cfg=CFG, num_partitions=parts)
+
+
+def _agg_q(pt):
+    return (PartitionedQuery(pt).filter(col("v") > 100)
+            .aggregate({"s": ("sum", "v"), "c": ("count", None)}))
+
+
+def test_deadline_expired_while_queued(rng):
+    pt = _serve_table(rng)
+    srv = QueryServer(pt, start=False)
+    t = srv.submit(_agg_q(pt), deadline_s=0.0)
+    time.sleep(0.005)
+    assert srv.step() == 0  # reaped at batch formation, never executed
+    with pytest.raises(QueryDeadlineExceeded):
+        srv.result(t)
+    assert srv.stats()["expired"] == 1
+    assert srv.stats()["completed"] == 0
+    srv.close()
+
+
+def test_deadline_expires_at_partition_boundary(rng):
+    pt = _serve_table(rng)
+    srv = QueryServer(pt, start=False)
+    # warm the plan cache so tracing cost cannot eat the deadline budget
+    warm = srv.submit(_agg_q(pt))
+    srv.step()
+    assert srv.result(warm, timeout=60)["c"] > 0
+    t = srv.submit(_agg_q(pt), deadline_s=0.25)
+    # 600ms of injected latency in front of partition 1's copy: the
+    # deadline check at the NEXT partition boundary must fire
+    with FaultPlan().latency(part=1, ms=600):
+        srv.step()
+    with pytest.raises(QueryDeadlineExceeded):
+        srv.result(t)
+    stats = t.stats  # failed tickets carry no stats dict
+    assert stats is None
+    assert srv.stats()["expired"] == 1
+    srv.close()
+
+
+def test_cancel_queued_and_finished(rng):
+    pt = _serve_table(rng)
+    srv = QueryServer(pt, start=False)
+    t = srv.submit(_agg_q(pt))
+    assert srv.cancel(t) is True
+    with pytest.raises(QueryCancelled):
+        srv.result(t)
+    assert srv.step() == 0  # dequeued: nothing left to run
+    t2 = srv.submit(_agg_q(pt))
+    srv.step()
+    assert srv.result(t2, timeout=60)["c"] > 0
+    assert srv.cancel(t2) is False  # already finished: result stands
+    stats = srv.stats()
+    assert stats["cancelled"] == 1 and stats["completed"] == 1
+    srv.close()
+
+
+def test_result_timeout_dequeues_ticket(rng):
+    pt = _serve_table(rng)
+    srv = QueryServer(pt, start=False)  # no drain: the ticket stays queued
+    t = srv.submit(_agg_q(pt))
+    with pytest.raises(TimeoutError):
+        srv.result(t, timeout=0.01)
+    assert t.done.is_set()  # the pre-§15 bug: it stayed queued forever
+    with pytest.raises(QueryCancelled):
+        srv.result(t)
+    stats = srv.stats()
+    assert stats["timeouts"] == 1 and stats["cancelled"] == 1
+    assert srv.step() == 0
+    srv.close()
+
+
+def test_poisoned_subscriber_is_isolated(rng):
+    pt = _serve_table(rng)
+    expected = _payload(_agg_q(pt).run())
+    srv = QueryServer(pt, start=False)
+    bad = srv.submit(_agg_q(pt))
+    good = srv.submit(_agg_q(pt))
+    # "program" faults fire per (partition, subscriber): attempt 0 on
+    # partition 0 is the FIRST subscriber's program — the batch head
+    with FaultPlan().transient(part=0, site="program"):
+        assert srv.step() == 2  # both admitted to one shared pass
+    with pytest.raises(TransientTransferError):
+        srv.result(bad)
+    _assert_same(expected, _payload(srv.result(good)))
+    assert good.shared_with == 1
+    stats = srv.stats()
+    assert stats["errors"] == 1 and stats["completed"] == 1
+    srv.close()
+
+
+def test_shared_scan_oom_falls_back_to_solo_passes(rng):
+    pt = _serve_table(rng)
+
+    def mk_b():
+        return (PartitionedQuery(pt).filter(col("v") > 500)
+                .aggregate({"s": ("sum", "v"), "c": ("count", None)}))
+
+    expected_a = _payload(_agg_q(pt).run())
+    expected_b = _payload(mk_b().run())
+    srv = QueryServer(pt, start=False)
+    oom0 = _counter("fault.serve_oom")
+    a = srv.submit(_agg_q(pt))
+    b = srv.submit(mk_b())
+    plan = FaultPlan()
+    for attempt in range(3):  # exhaust depth 2 -> 1 -> 0 in the shared pass
+        plan.oom(part=1, attempt=attempt, site="compute")
+    with dispatch.overrides(prefetch_depth=2, transfer_backoff_ms=0.0):
+        with plan:
+            srv.step()
+    _assert_same(expected_a, _payload(srv.result(a)))
+    _assert_same(expected_b, _payload(srv.result(b)))
+    assert srv.stats()["oom_fallbacks"] >= 1
+    assert _counter("fault.serve_oom") > oom0
+    srv.close()
+
+
+def test_close_drain_false_cancels_queue(rng):
+    pt = _serve_table(rng)
+    srv = QueryServer(pt, start=False)
+    tickets = [srv.submit(_agg_q(pt)) for _ in range(3)]
+    srv.close(drain=False)
+    for t in tickets:
+        with pytest.raises(QueryCancelled, match="drain=False"):
+            srv.result(t)
+    assert srv.stats()["cancelled"] == 3
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(_agg_q(pt))
+
+
+def test_recover_clears_fatal_state(rng):
+    pt = _serve_table(rng)
+    srv = QueryServer(pt, start=False)
+    srv._fatal = RuntimeError("zero-retrace contract violated (simulated)")
+    with pytest.raises(RuntimeError, match="simulated"):
+        srv.submit(_agg_q(pt))
+    srv.recover()
+    t = srv.submit(_agg_q(pt))
+    srv.step()
+    assert srv.result(t, timeout=60)["c"] > 0
+    srv.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.recover()
+
+
+# ---------------------------------------------------------------------------
+# 5. integrity validation
+# ---------------------------------------------------------------------------
+
+
+def test_unpack_array_inverts_pack_array(rng):
+    for bits in (1, 5, 11, 17, 23, 31, 32):
+        for n in (0, 1, 7, 100):
+            off = int(rng.integers(-5000, 5000))
+            vals = off + rng.integers(0, min(1 << bits, 1 << 31), size=n)
+            words = compress.pack_array(vals, off, bits)
+            np.testing.assert_array_equal(
+                compress.unpack_array(words, off, bits, n), vals)
+
+
+@pytest.mark.parametrize("enc", SIX_ENCODINGS)
+def test_every_encoding_round_trip_validates_clean(rng, enc):
+    pt = _enc_table(rng, enc, n=4_000, parts=4)
+    assert pt.validate() is pt
+    # the single-table path too
+    k = np.sort(rng.integers(0, 20, 2048)).astype(np.int32)
+    encs = None if enc == "plain_dict" else {"k": enc}
+    if enc == "plain_dict":
+        k = np.array([f"s{i}" for i in range(20)])[k]
+    t = Table.from_arrays({"k": k}, cfg=CFG, encodings=encs, pack=True)
+    assert t.validate() is t
+
+
+def test_validate_catches_overlapping_runs():
+    # runs [0,4] and [3,6] overlap; sentinel tail correct
+    colx = RLEColumn(values=np.array([5, 7, 0, 0], np.int32),
+                     starts=np.array([0, 3, 8, 8], np.int32),
+                     ends=np.array([4, 6, 8, 8], np.int32), n=2, nrows=8)
+    with pytest.raises(ValidationError, match="overlap"):
+        compress.validate_encoded(colx, "x", 8)
+
+
+def test_validate_catches_broken_sentinels():
+    colx = IndexColumn(values=np.array([5, 7, 0, 0], np.int32),
+                       positions=np.array([1, 3, 0, 8], np.int32),
+                       n=2, nrows=8)
+    with pytest.raises(ValidationError, match="sentinel"):
+        compress.validate_encoded(colx, "x", 8)
+
+
+def test_validate_catches_unsorted_positions():
+    colx = IndexColumn(values=np.array([5, 7, 0, 0], np.int32),
+                       positions=np.array([3, 1, 8, 8], np.int32),
+                       n=2, nrows=8)
+    with pytest.raises(ValidationError, match="strictly increasing"):
+        compress.validate_encoded(colx, "x", 8)
+
+
+def test_validate_catches_dictionary_escape(rng):
+    codes = rng.integers(0, 4, 256).astype(np.int32)
+    t = Table.from_arrays({"c": np.array(["a", "b", "c", "d"])[codes]},
+                          cfg=CFG)
+    t.dictionaries["c"] = t.dictionaries["c"][:2]  # shrink: codes 2,3 escape
+    with pytest.raises(ValidationError, match="dictionary"):
+        t.validate()
+
+
+def test_validate_catches_stale_zone_map(rng):
+    pt = _serve_table(rng)
+    pt.partitions[1].zone_hi["v"] = 1.0
+    with pytest.raises(ValidationError, match="zone map"):
+        pt.validate()
+
+
+def test_validate_catches_too_narrow_packed_width(rng):
+    vals = rng.integers(0, 100, 4096).astype(np.int32)
+    t = Table.from_arrays({"v": vals}, cfg=CFG, pack=True)
+    t.validate()
+    # claim a wider recorded domain than the packed width can represent
+    t.domains["v"] = (0, 1 << 20)
+    with pytest.raises(ValidationError, match="cannot represent"):
+        t.validate()
+
+
+def test_validate_catches_domain_escape(rng):
+    vals = rng.integers(0, 100, 2048).astype(np.int32)
+    t = Table.from_arrays({"v": vals}, cfg=CFG)  # unpacked: no width check
+    t.domains["v"] = (0, 50)  # actual values reach 99
+    with pytest.raises(ValidationError, match="domain"):
+        t.validate()
